@@ -1,0 +1,52 @@
+"""Micro-benchmarks: aggregator throughput + Pallas kernel vs oracle.
+
+Timing on CPU is indicative only (the kernel path runs in interpret
+mode); the derived column reports the relative accuracy / speed ratio.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregators
+from repro.kernels import ref as kref
+from repro.kernels.vrmom import vrmom_pallas
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def bench_aggregators(m=33, c=65536):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (m, c))
+    rows = []
+    for name in ("mean", "median", "vrmom", "trimmed_mean",
+                 "geometric_median", "krum"):
+        kw = {"n_byzantine": 2} if name == "krum" else {}
+        fn = jax.jit(aggregators.get(name, **kw))
+        us = _time(fn, x)
+        rows.append((f"micro/agg/{name}/m{m}xc{c}", us, c / max(us, 1e-9)))
+    return rows
+
+
+def bench_kernel(m=32, c=65536, K=10):
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (m, c))
+    oracle = jax.jit(lambda x: kref.ref_vrmom(x, K=K))
+    us_ref = _time(oracle, x)
+    # interpret-mode pallas: correctness-representative, not perf
+    us_pal = _time(lambda x: vrmom_pallas(x, K=K, interpret=True), x, iters=2)
+    err = float(jnp.max(jnp.abs(oracle(x)
+                                - vrmom_pallas(x, K=K, interpret=True))))
+    return [
+        (f"micro/kernel/ref_vrmom/m{m}xc{c}", us_ref, 0.0),
+        (f"micro/kernel/pallas_interpret/m{m}xc{c}", us_pal, err),
+    ]

@@ -1,0 +1,47 @@
+"""Benchmark harness. One function per paper table + micro benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (for the paper tables, the
+us_per_call column carries the RMSE and derived carries the VRMOM/MOM
+ratio or std).
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only table2,micro]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale reps (500); default is reduced")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,table2,table34,table56,micro")
+    args = ap.parse_args()
+
+    from . import micro, paper_tables as T
+
+    sections = {
+        "table1": lambda: T.table1(reps=500 if args.full else 60),
+        "table2": lambda: T.table2(reps=500 if args.full else 120),
+        "table34": lambda: T.tables34(reps=500 if args.full else 12),
+        "table56": lambda: T.tables56(reps=500 if args.full else 8),
+        "micro": lambda: micro.bench_aggregators() + micro.bench_kernel(),
+    }
+    only = set(args.only.split(",")) if args.only else set(sections)
+
+    print("name,us_per_call,derived")
+    for name, fn in sections.items():
+        if name not in only:
+            continue
+        t0 = time.time()
+        for row in fn():
+            print(f"{row[0]},{row[1]:.6g},{row[2]:.6g}")
+            sys.stdout.flush()
+        print(f"# section {name} took {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: the VRMOM estimator in 60 seconds.
+
+Reproduces the headline claim of the paper (Theorem 1): VRMOM keeps the
+Byzantine robustness of median-of-means while recovering most of the
+statistical efficiency the median throws away (2/pi = 0.637 -> 3/pi =
+0.955 asymptotically).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import attacks, vrmom as V
+
+
+def main():
+    m1, n, reps, K = 101, 1000, 2000, 10
+    key = jax.random.PRNGKey(0)
+
+    # --- efficiency, no Byzantine machines -------------------------------
+    xbar = jax.random.normal(key, (reps, m1)) / jnp.sqrt(n)  # machine means
+    est_mean = jnp.mean(xbar, axis=1)
+    est_mom = jax.vmap(V.mom)(xbar)
+    est_vr = jax.vmap(lambda x: V.vrmom(x, K=K))(xbar)
+    v = lambda x: float(jnp.var(x) * m1 * n)
+    print("asymptotic variance x N (theory: mean=1, MOM=pi/2=1.571, "
+          f"VRMOM_K10={V.sigma_k_sq(K):.3f})")
+    print(f"  mean : {v(est_mean):.3f}")
+    print(f"  MOM  : {v(est_mom):.3f}")
+    print(f"  VRMOM: {v(est_vr):.3f}   (efficiency "
+          f"{v(est_mean)/v(est_vr):.2f} vs MOM {v(est_mean)/v(est_mom):.2f})")
+
+    # --- robustness: 20% Byzantine machines ------------------------------
+    mask = attacks.byzantine_mask(m1, 0.2)
+    xbad = jax.vmap(lambda x, k: attacks.gaussian(k, x, mask))(
+        xbar, jax.random.split(jax.random.PRNGKey(1), reps))
+    for name, fn in [("mean", lambda x: jnp.mean(x)),
+                     ("MOM", V.mom),
+                     ("VRMOM", lambda x: V.vrmom(x, K=K))]:
+        est = jax.vmap(fn)(xbad)
+        rmse = float(jnp.sqrt(jnp.mean(est**2)))
+        print(f"  20% Byzantine, {name:5s}: RMSE {rmse:.5f}")
+
+    # --- fused Pallas kernel (interpret mode on CPU) ----------------------
+    from repro.kernels import vrmom_pallas
+    x = 3.0 + jax.random.normal(jax.random.PRNGKey(2), (33, 4096))
+    out = vrmom_pallas(x, K=10, interpret=True)
+    ref = jax.vmap(lambda c: V.vrmom(c, K=10), in_axes=1)(x)
+    print(f"pallas kernel max|err| vs estimator: "
+          f"{float(jnp.max(jnp.abs(out - ref))):.2e}")
+
+
+if __name__ == "__main__":
+    main()

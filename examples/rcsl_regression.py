@@ -1,0 +1,37 @@
+"""Paper reproduction: RCSL vs MOM-RCSL on linear & logistic regression
+(Tables 3-6 of the paper), under Gaussian / omniscient / bit-flip /
+label-flip Byzantine attacks.
+
+  PYTHONPATH=src python examples/rcsl_regression.py [--reps 20] [--full]
+
+With --full this matches the paper's 500-rep setting (slow on CPU).
+Expected qualitative result (paper Tables 3-6): every ratio < 1, i.e.
+VRMOM-aggregated RCSL beats MOM-RCSL, with the gap shrinking as the
+Byzantine fraction grows.
+"""
+import argparse
+
+from benchmarks import paper_tables as T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reps", type=int, default=12)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    reps = 500 if args.full else args.reps
+
+    print("== Linear regression (paper Tables 3-4) ==")
+    print(f"{'setting':34s} {'RCSL':>8s} {'ratio(RCSL/MOM-RCSL)':>22s}")
+    for name, rmse, ratio in T.tables34(reps=reps):
+        if name.endswith("/rcsl"):
+            print(f"{name:34s} {rmse:8.4f} {ratio:22.4f}")
+
+    print("\n== Logistic regression, label-flip attack (Tables 5-6) ==")
+    for name, rmse, ratio in T.tables56(reps=max(reps // 2, 4)):
+        if name.endswith("/rcsl"):
+            print(f"{name:34s} {rmse:8.4f} {ratio:22.4f}")
+
+
+if __name__ == "__main__":
+    main()

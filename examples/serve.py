@@ -1,0 +1,71 @@
+"""Serving example: batched prefill + decode with a KV cache.
+
+Runs a reduced variant of any assigned architecture on host devices,
+prefills a batch of prompts and greedily decodes continuations.
+
+  PYTHONPATH=src python examples/serve.py --arch mixtral-8x7b --tokens 16
+"""
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get as get_arch
+from repro.models import model as M
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = M.init(key, cfg)
+
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (args.batch, cfg.encoder.n_frames, cfg.d_model), jnp.float32)
+    elif cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (args.batch, cfg.vision.n_patches, cfg.d_model), jnp.float32)
+
+    max_len = args.prompt_len + args.tokens + 8
+    prefill = jax.jit(lambda p, b: M.prefill(p, cfg, b, cache_len=max_len))
+    decode = jax.jit(lambda p, c, t: M.decode_step(p, cfg, c, t))
+
+    t0 = time.time()
+    logits, caches = prefill(params, batch)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    print(f"{cfg.name}: prefilled {args.batch}x{args.prompt_len} in "
+          f"{time.time()-t0:.2f}s")
+
+    out = [tok]
+    t0 = time.time()
+    for _ in range(args.tokens - 1):
+        logits, caches = decode(params, caches, tok)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    dt = time.time() - t0
+    gen = jnp.stack(out, axis=1)
+    print(f"decoded {args.tokens} tokens/seq in {dt:.2f}s "
+          f"({args.tokens * args.batch / max(dt, 1e-9):.1f} tok/s)")
+    print("generated ids[0]:", list(map(int, gen[0])))
+    assert bool(jnp.all(gen >= 0)) and bool(jnp.all(gen < cfg.vocab))
+
+
+if __name__ == "__main__":
+    main()

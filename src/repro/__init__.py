@@ -1,0 +1,8 @@
+"""repro: Byzantine-robust distributed training with VRMOM (JAX/TPU).
+
+Faithful implementation of Tu, Liu, Mao & Chen (2021) — the VRMOM
+estimator and the RCSL algorithm — integrated as a first-class robust
+gradient-aggregation layer in a multi-pod JAX training/serving framework.
+See README.md / DESIGN.md / EXPERIMENTS.md.
+"""
+__version__ = "1.0.0"

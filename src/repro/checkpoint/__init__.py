@@ -1,0 +1,53 @@
+"""Minimal pytree checkpointing: .npz payload + JSON tree structure.
+
+Arrays are gathered to host (fine at the scales we train on CPU; on a
+real pod this would be an async, per-shard writer — noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_META = "tree.json"
+_DATA = "arrays.npz"
+
+
+def _paths(tree):
+    flat, treedef = jax.tree.flatten(tree)
+    return flat, treedef
+
+
+def save(path: str, tree) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat, treedef = _paths(tree)
+    arrays, dtypes = {}, []
+    for i, x in enumerate(flat):
+        a = np.asarray(jax.device_get(x))
+        dtypes.append(str(a.dtype))
+        if a.dtype == jnp.bfloat16:  # npz has no bf16: store raw bits
+            a = a.view(np.uint16)
+        arrays[f"a{i}"] = a
+    np.savez(os.path.join(path, _DATA), **arrays)
+    meta = {"treedef": str(treedef), "n": len(flat), "dtypes": dtypes}
+    with open(os.path.join(path, _META), "w") as f:
+        json.dump(meta, f)
+
+
+def restore(path: str, like):
+    """Restore into the structure (and shardings) of ``like``."""
+    flat_like, treedef = _paths(like)
+    with np.load(os.path.join(path, _DATA)) as z:
+        flat = [z[f"a{i}"] for i in range(len(flat_like))]
+    out = []
+    for a, l in zip(flat, flat_like):
+        if a.dtype == np.uint16 and jnp.dtype(l.dtype) == jnp.bfloat16:
+            a = a.view(jnp.bfloat16)
+        x = jnp.asarray(a, dtype=l.dtype)
+        if hasattr(l, "sharding") and l.sharding is not None:
+            x = jax.device_put(x, l.sharding)
+        out.append(x)
+    return jax.tree.unflatten(treedef, out)

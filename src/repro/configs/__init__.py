@@ -1,0 +1,3 @@
+"""Assigned architecture configs. get(name) / list_archs()."""
+from .base import INPUT_SHAPES, ArchConfig, EncoderConfig, InputShape, MoEConfig, SSMConfig, VisionStubConfig, input_specs
+from .registry import ARCHS, get, list_archs

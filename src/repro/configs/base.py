@@ -1,0 +1,193 @@
+"""Architecture + input-shape configuration.
+
+Every assigned architecture is an ``ArchConfig``; the four assigned input
+shapes are in ``INPUT_SHAPES``. ``input_specs(cfg, shape)`` returns
+ShapeDtypeStruct stand-ins for every model input (weak-type-correct,
+shardable, no device allocation) — used by the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    d_conv: int = 4
+    chunk: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    """Whisper-style encoder. The conv/mel frontend is a STUB: inputs are
+    precomputed frame embeddings [B, n_frames, d_model] (DESIGN.md §4)."""
+
+    n_layers: int
+    n_frames: int = 1500
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionStubConfig:
+    """VLM frontend stub: precomputed patch embeddings [B, n_patches, d]."""
+
+    n_patches: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0  # 0 -> d_model // n_heads
+    rope: bool = True
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    sliding_window: Optional[int] = None
+    tie_embeddings: bool = True
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid_attn_every: int = 0  # zamba2: shared attn block every k layers
+    encoder: Optional[EncoderConfig] = None
+    vision: Optional[VisionStubConfig] = None
+    norm_eps: float = 1e-5
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    attn_chunk: int = 1024  # query-block size for chunked attention
+    loss_chunk: int = 1024  # sequence-chunked cross-entropy
+    remat: bool = True
+    remat_block: int = 1  # >1: two-level remat, store every Nth boundary
+    optimizer: str = "adamw"  # llama3-405b overrides to adafactor
+    source: str = ""  # citation
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can run long_500k natively (without the SWA variant)."""
+        return self.family in ("ssm", "hybrid") or self.sliding_window is not None
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant of the same family: <=2 layers, d_model<=256,
+        <=4 experts, tiny vocab. Used by per-arch CPU smoke tests."""
+        kw = {}
+        if self.moe is not None:
+            kw["moe"] = MoEConfig(
+                n_experts=min(self.moe.n_experts, 4),
+                top_k=min(self.moe.top_k, 2),
+                capacity_factor=self.moe.capacity_factor,
+            )
+        if self.ssm is not None:
+            kw["ssm"] = dataclasses.replace(
+                self.ssm, d_state=16, head_dim=32, chunk=16
+            )
+        if self.encoder is not None:
+            kw["encoder"] = EncoderConfig(n_layers=2, n_frames=12)
+        if self.vision is not None:
+            kw["vision"] = VisionStubConfig(n_patches=4)
+        n_layers = min(self.n_layers, 4 if self.hybrid_attn_every else 2)
+        kw["hybrid_attn_every"] = 2 if self.hybrid_attn_every else 0
+        d_model = 128 if self.family != "ssm" else 64
+        n_heads = min(self.n_heads, 4)
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=n_layers,
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=min(self.n_kv_heads, max(1, n_heads // 2)),
+            d_head=32,
+            d_ff=256,
+            vocab=512,
+            sliding_window=min(self.sliding_window, 16) if self.sliding_window else None,
+            param_dtype="float32",
+            compute_dtype="float32",
+            attn_chunk=16,
+            loss_chunk=32,
+            remat=False,
+            **kw,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape | str):
+    """ShapeDtypeStruct stand-ins for the step function's data inputs.
+
+    train:   tokens/labels [B, S] int32 (+ stubbed frontend embeddings)
+    prefill: tokens [B, S]
+    decode:  token [B] + positions handled by the cache (allocated inside
+             the jitted step from the cache spec — see launch/dryrun.py).
+    """
+    if isinstance(shape, str):
+        shape = INPUT_SHAPES[shape]
+    B, S = shape.global_batch, shape.seq_len
+    emb = jnp.dtype(cfg.compute_dtype)
+    specs = {}
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            specs["frames"] = _sds((B, cfg.encoder.n_frames, cfg.d_model), emb)
+            specs["tokens"] = _sds((B, S), jnp.int32)
+        elif cfg.family == "vlm":
+            n_img = cfg.vision.n_patches
+            specs["patches"] = _sds((B, n_img, cfg.d_model), emb)
+            specs["tokens"] = _sds((B, S - n_img), jnp.int32)
+        else:
+            specs["tokens"] = _sds((B, S), jnp.int32)
+    elif shape.kind == "prefill":
+        if cfg.family == "encdec":
+            specs["frames"] = _sds((B, cfg.encoder.n_frames, cfg.d_model), emb)
+            specs["tokens"] = _sds((B, S), jnp.int32)
+        elif cfg.family == "vlm":
+            n_img = cfg.vision.n_patches
+            specs["patches"] = _sds((B, n_img, cfg.d_model), emb)
+            specs["tokens"] = _sds((B, S - n_img), jnp.int32)
+        else:
+            specs["tokens"] = _sds((B, S), jnp.int32)
+    elif shape.kind == "decode":
+        specs["token"] = _sds((B,), jnp.int32)
+    else:
+        raise ValueError(shape.kind)
+    return specs

@@ -1,0 +1,13 @@
+"""llama3-405b [dense]: GQA kv=8, 128k vocab [arXiv:2407.21783].
+
+Uses adafactor (f32 Adam moments exceed v5e HBM — DESIGN.md §5) and the
+in-backward robust reduce (IB-RRS) aggregation mode at train time."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama3-405b", family="dense",
+    n_layers=126, d_model=16384, n_heads=128, n_kv_heads=8, d_head=128,
+    d_ff=53248, vocab=128256, rope_theta=500_000.0, tie_embeddings=False,
+    optimizer="adafactor", remat_block=7,
+    source="arXiv:2407.21783",
+)

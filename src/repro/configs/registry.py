@@ -1,0 +1,19 @@
+"""Registry of the 10 assigned architectures (--arch <id>)."""
+from . import (granite_moe_3b_a800m, llama3_405b, mamba2_2_7b, minitron_4b,
+               mixtral_8x7b, phi_3_vision_4_2b, qwen3_1_7b, starcoder2_7b,
+               whisper_medium, zamba2_7b)
+
+ARCHS = {
+    m.CONFIG.name: m.CONFIG
+    for m in (whisper_medium, qwen3_1_7b, starcoder2_7b, phi_3_vision_4_2b,
+              zamba2_7b, granite_moe_3b_a800m, minitron_4b, mamba2_2_7b,
+              mixtral_8x7b, llama3_405b)
+}
+
+
+def get(name: str):
+    return ARCHS[name]
+
+
+def list_archs():
+    return sorted(ARCHS)

@@ -1,0 +1,12 @@
+"""starcoder2-7b [dense]: GQA kv=4, RoPE [arXiv:2402.19173].
+
+36 heads do not divide the 16-way model axis; sharding relies on GSPMD
+uneven partitioning (DESIGN.md §5)."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-7b", family="dense",
+    n_layers=32, d_model=4608, n_heads=36, n_kv_heads=4, d_head=128,
+    d_ff=18432, vocab=49152, tie_embeddings=False,
+    source="arXiv:2402.19173",
+)

@@ -1,0 +1,14 @@
+"""Core contribution of the paper: VRMOM estimator + RCSL algorithm."""
+from . import aggregators, attacks, rcsl, vrmom
+from .vrmom import mom, vrmom as vrmom_estimate, sigma_k_sq, sigma_mom_sq
+
+__all__ = [
+    "aggregators",
+    "attacks",
+    "rcsl",
+    "vrmom",
+    "mom",
+    "vrmom_estimate",
+    "sigma_k_sq",
+    "sigma_mom_sq",
+]

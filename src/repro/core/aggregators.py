@@ -1,0 +1,108 @@
+"""Robust aggregators over a worker axis.
+
+Every aggregator maps ``[m+1, ...] -> [...]`` (worker axis 0 by
+convention) and is usable both on raw vectors (statistical experiments)
+and on flattened gradient shards (distributed training — see
+``repro.dist.robust_reduce``).
+
+Implemented: mean, coordinate-wise median (MOM), VRMOM (the paper's
+contribution), trimmed mean (Yin et al. 2018), geometric median (Feng et
+al. 2014; Weiszfeld iterations), Krum (Blanchard et al. 2017).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import vrmom as _v
+
+Aggregator = Callable[[jnp.ndarray], jnp.ndarray]
+
+__all__ = [
+    "mean",
+    "median",
+    "trimmed_mean",
+    "geometric_median",
+    "krum",
+    "vrmom",
+    "get",
+    "REGISTRY",
+]
+
+
+def mean(x, axis: int = 0):
+    return jnp.mean(x, axis=axis)
+
+
+def median(x, axis: int = 0):
+    return jnp.median(x, axis=axis)
+
+
+def trimmed_mean(x, beta: float = 0.1, axis: int = 0):
+    """Coordinate-wise beta-trimmed mean: drop the beta fraction at each end."""
+    m = x.shape[axis]
+    k = int(beta * m)
+    xs = jnp.sort(x, axis=axis)
+    sl = [slice(None)] * x.ndim
+    sl[axis] = slice(k, m - k if m - k > k else k + 1)
+    return jnp.mean(xs[tuple(sl)], axis=axis)
+
+
+def geometric_median(x, iters: int = 8, eps: float = 1e-8, axis: int = 0):
+    """Geometric median over workers via Weiszfeld iterations.
+
+    Treats each worker's row as a vector in R^(rest); returns [rest].
+    """
+    x = jnp.moveaxis(x, axis, 0)
+    m = x.shape[0]
+    flat = x.reshape(m, -1)
+    y = jnp.mean(flat, axis=0)
+
+    def body(y, _):
+        d = jnp.sqrt(jnp.sum((flat - y) ** 2, axis=-1) + eps)
+        w = 1.0 / d
+        y = jnp.sum(flat * w[:, None], axis=0) / jnp.sum(w)
+        return y, None
+
+    y, _ = jax.lax.scan(body, y, None, length=iters)
+    return y.reshape(x.shape[1:])
+
+
+def krum(x, n_byzantine: int = 0, axis: int = 0):
+    """Krum: select the worker closest to its m - f - 2 nearest neighbours."""
+    x = jnp.moveaxis(x, axis, 0)
+    m = x.shape[0]
+    flat = x.reshape(m, -1)
+    d2 = jnp.sum((flat[:, None, :] - flat[None, :, :]) ** 2, axis=-1)
+    d2 = d2 + jnp.eye(m) * jnp.inf  # exclude self
+    k = max(m - n_byzantine - 2, 1)
+    nearest = jnp.sort(d2, axis=1)[:, :k]
+    scores = jnp.sum(nearest, axis=1)
+    idx = jnp.argmin(scores)
+    return flat[idx].reshape(x.shape[1:])
+
+
+def vrmom(x, K: int = 10, scale="mad", master_samples=None, axis: int = 0):
+    return _v.vrmom(x, K=K, axis=axis, scale=scale, master_samples=master_samples)
+
+
+REGISTRY = {
+    "mean": mean,
+    "median": median,
+    "mom": median,
+    "trimmed_mean": trimmed_mean,
+    "geometric_median": geometric_median,
+    "krum": krum,
+    "vrmom": vrmom,
+}
+
+
+def get(name: str, **kwargs) -> Aggregator:
+    """Look up an aggregator by name, binding keyword options."""
+    fn = REGISTRY[name]
+    if kwargs:
+        return functools.partial(fn, **kwargs)
+    return fn

@@ -1,0 +1,89 @@
+"""Byzantine attack models from Section 4 of the paper (plus extras).
+
+An attack transforms the stacked honest messages ``v`` of shape
+``[m+1, ...]`` into corrupted messages, replacing the rows selected by a
+boolean mask. Machine 0 (the master H0) is never corrupted, matching the
+paper's setup. Attacks are pure functions of (key, values, mask) so they
+compose with vmap/jit.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Attack = Callable[[jax.Array, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+__all__ = [
+    "byzantine_mask",
+    "gaussian",
+    "omniscient",
+    "bitflip",
+    "signflip",
+    "zero",
+    "get",
+    "REGISTRY",
+]
+
+
+def byzantine_mask(m_plus_1: int, alpha: float) -> jnp.ndarray:
+    """Deterministic mask with floor(alpha * m) Byzantine workers.
+
+    Row 0 is the master and never Byzantine (paper Definition 1 with the
+    master assumed trusted). The last floor(alpha*m) workers are chosen;
+    the estimators are permutation-invariant so the choice is WLOG.
+    """
+    m = m_plus_1 - 1
+    n_byz = int(alpha * m)
+    idx = jnp.arange(m_plus_1)
+    return idx >= (m_plus_1 - n_byz)
+
+
+def _apply(mask, honest, corrupt):
+    mask = mask.reshape((-1,) + (1,) * (honest.ndim - 1))
+    return jnp.where(mask, corrupt, honest)
+
+
+def gaussian(key, v, mask, std: float = 200.0 ** 0.5):
+    """Gaussian attack: replace messages by N(0, 200*I) draws (paper 4.1)."""
+    noise = std * jax.random.normal(key, v.shape, v.dtype)
+    return _apply(mask, v, noise)
+
+
+def omniscient(key, v, mask, scale: float = 1e10):
+    """Omniscient attack: scaled negative of the honest mean (paper 4.2(b))."""
+    honest_mean = jnp.mean(v, axis=0, keepdims=True)
+    return _apply(mask, v, -scale * jnp.broadcast_to(honest_mean, v.shape))
+
+
+def bitflip(key, v, mask, n_dims: int = 5):
+    """Bit-flip attack: flip the sign of the first ``n_dims`` coordinates."""
+    if v.ndim == 1:
+        return _apply(mask, v, -v)
+    flip = jnp.where(jnp.arange(v.shape[-1]) < n_dims, -1.0, 1.0).astype(v.dtype)
+    return _apply(mask, v, v * flip)
+
+
+def signflip(key, v, mask, scale: float = 1.0):
+    """Full sign flip (classic baseline)."""
+    return _apply(mask, v, -scale * v)
+
+
+def zero(key, v, mask):
+    """Send zeros (drop-out / crash failure)."""
+    return _apply(mask, v, jnp.zeros_like(v))
+
+
+REGISTRY = {
+    "none": lambda key, v, mask: v,
+    "gaussian": gaussian,
+    "omniscient": omniscient,
+    "bitflip": bitflip,
+    "signflip": signflip,
+    "zero": zero,
+}
+
+
+def get(name: str) -> Attack:
+    return REGISTRY[name]

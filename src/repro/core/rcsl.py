@@ -1,0 +1,249 @@
+"""Robust CSL (RCSL) — Algorithm 1 of the paper.
+
+One round (master H0 = shard 0):
+  1. broadcast theta; every machine j computes g_j = (1/n) sum grad f(X_i, theta)
+  2. Byzantine machines send arbitrary values instead
+  3. master aggregates coordinate-wise with VRMOM (or any aggregator)
+  4. master minimizes the CSL surrogate
+        (1/n) sum_{i in H0} f(X_i, theta) - <g_0 - g_bar, theta>
+
+``Problem`` abstracts the model: local gradients, the H0 per-sample
+gradients (for the paper-faithful sigma_hat), and the surrogate solve.
+Linear regression has the paper's closed form; logistic regression uses
+Newton; ``GenericProblem`` uses autodiff + gradient descent.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import aggregators, attacks
+from .vrmom import vrmom as _vrmom
+
+
+class Shards(NamedTuple):
+    """Data evenly split over m+1 machines. X: [m+1, n, p], Y: [m+1, n]."""
+
+    X: jnp.ndarray
+    Y: jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Problems
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearRegressionProblem:
+    """f(x, theta) = (y - x^T theta)^2  (paper Section 4.2)."""
+
+    ridge: float = 0.0
+
+    def local_grad(self, theta, X, Y):
+        resid = X @ theta - Y  # [n]
+        return 2.0 * (X.T @ resid) / X.shape[0]
+
+    def per_sample_grads(self, theta, X, Y):
+        resid = X @ theta - Y
+        return 2.0 * X * resid[:, None]  # [n, p]
+
+    def init_theta(self, X, Y):
+        n, p = X.shape
+        A = X.T @ X / n + self.ridge * jnp.eye(p)
+        return jnp.linalg.solve(A, X.T @ Y / n)
+
+    def master_solve(self, theta, X, Y, linear_term):
+        """argmin (1/n) sum (y - x^T th)^2 - <linear_term, th> (closed form)."""
+        n, p = X.shape
+        A = 2.0 * (X.T @ X) / n + self.ridge * jnp.eye(p)
+        b = 2.0 * (X.T @ Y) / n + linear_term
+        return jnp.linalg.solve(A, b)
+
+
+@dataclasses.dataclass(frozen=True)
+class LogisticRegressionProblem:
+    """f(x, theta) = log(1 + exp(x^T th)) - y x^T th; Newton master solve."""
+
+    newton_iters: int = 25
+    ridge: float = 1e-8
+
+    def local_grad(self, theta, X, Y):
+        mu = jax.nn.sigmoid(X @ theta)
+        return X.T @ (mu - Y) / X.shape[0]
+
+    def per_sample_grads(self, theta, X, Y):
+        mu = jax.nn.sigmoid(X @ theta)
+        return X * (mu - Y)[:, None]
+
+    def init_theta(self, X, Y):
+        p = X.shape[1]
+        return self._newton(jnp.zeros(p), X, Y, jnp.zeros(p))
+
+    def master_solve(self, theta, X, Y, linear_term):
+        return self._newton(theta, X, Y, linear_term)
+
+    def _newton(self, theta, X, Y, linear_term):
+        n = X.shape[0]
+
+        def body(theta, _):
+            mu = jax.nn.sigmoid(X @ theta)
+            g = X.T @ (mu - Y) / n - linear_term
+            w = mu * (1.0 - mu)
+            H = (X.T * w) @ X / n + self.ridge * jnp.eye(X.shape[1])
+            return theta - jnp.linalg.solve(H, g), None
+
+        theta, _ = jax.lax.scan(body, theta, None, length=self.newton_iters)
+        return theta
+
+
+@dataclasses.dataclass(frozen=True)
+class GenericProblem:
+    """Any differentiable per-sample loss ``loss_fn(theta, x, y)``."""
+
+    loss_fn: Callable
+    master_steps: int = 200
+    lr: float = 0.1
+
+    def _mean_loss(self, theta, X, Y):
+        return jnp.mean(jax.vmap(self.loss_fn, in_axes=(None, 0, 0))(theta, X, Y))
+
+    def local_grad(self, theta, X, Y):
+        return jax.grad(self._mean_loss)(theta, X, Y)
+
+    def per_sample_grads(self, theta, X, Y):
+        return jax.vmap(jax.grad(self.loss_fn), in_axes=(None, 0, 0))(theta, X, Y)
+
+    def init_theta(self, X, Y):
+        theta = jnp.zeros(X.shape[1])
+        return self.master_solve(theta, X, Y, jnp.zeros_like(theta))
+
+    def master_solve(self, theta, X, Y, linear_term):
+        def body(theta, _):
+            g = jax.grad(self._mean_loss)(theta, X, Y) - linear_term
+            return theta - self.lr * g, None
+
+        theta, _ = jax.lax.scan(body, theta, None, length=self.master_steps)
+        return theta
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1
+# ---------------------------------------------------------------------------
+
+
+def aggregate_gradients(
+    grads,
+    aggregator: str = "vrmom",
+    K: int = 10,
+    scale: str = "master",
+    per_sample_grads_master=None,
+    **agg_kwargs,
+):
+    """Aggregate stacked per-machine gradients ``[m+1, p]`` (eq. 18/20)."""
+    if aggregator == "vrmom":
+        master_samples = per_sample_grads_master if scale == "master" else None
+        return _vrmom(grads, K=K, scale=scale, master_samples=master_samples)
+    return aggregators.get(aggregator, **agg_kwargs)(grads)
+
+
+def rcsl(
+    problem,
+    shards: Shards,
+    key: jax.Array,
+    alpha: float = 0.0,
+    attack: str = "none",
+    aggregator: str = "vrmom",
+    K: int = 10,
+    scale: str = "master",
+    rounds: int = 10,
+    tol: Optional[float] = 1e-4,
+    theta0: Optional[jnp.ndarray] = None,
+    labelflip: bool = False,
+    **agg_kwargs,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run Algorithm 1. Returns (theta_T, theta_trajectory [rounds+1, p]).
+
+    ``labelflip=True`` implements the paper's logistic attack mode: the
+    Byzantine machines compute *honest* gradients on data whose labels
+    were flipped (Y -> 1 - Y) rather than sending arbitrary vectors.
+    ``tol``: adaptive stopping |th_t - th_{t-1}|^2/|th_{t-1}|^2 <= tol;
+    after triggering, the trajectory repeats the converged iterate (the
+    computation stays fixed-shape for jit).
+    """
+    X, Y = shards.X, shards.Y
+    m1 = X.shape[0]
+    mask = attacks.byzantine_mask(m1, alpha)
+    attack_fn = attacks.get(attack)
+
+    if theta0 is None:
+        theta0 = problem.init_theta(X[0], Y[0])
+
+    Y_byz = (1.0 - Y) if labelflip else Y
+
+    def one_round(carry, key_t):
+        theta, done = carry
+        grads_h = jax.vmap(problem.local_grad, in_axes=(None, 0, 0))(theta, X, Y)
+        if labelflip:
+            grads_b = jax.vmap(problem.local_grad, in_axes=(None, 0, 0))(
+                theta, X, Y_byz
+            )
+            grads = jnp.where(mask[:, None], grads_b, grads_h)
+        else:
+            grads = attack_fn(key_t, grads_h, mask)
+        psg = problem.per_sample_grads(theta, X[0], Y[0]) if scale == "master" else None
+        gbar = aggregate_gradients(
+            grads, aggregator=aggregator, K=K, scale=scale,
+            per_sample_grads_master=psg, **agg_kwargs,
+        )
+        g0 = grads[0]
+        theta_new = problem.master_solve(theta, X[0], Y[0], g0 - gbar)
+        if tol is not None:
+            e = jnp.sum((theta_new - theta) ** 2) / jnp.maximum(
+                jnp.sum(theta**2), 1e-30
+            )
+            done_new = jnp.logical_or(done, e <= tol)
+            theta_new = jnp.where(done, theta, theta_new)
+            return (theta_new, done_new), theta_new
+        return (theta_new, done), theta_new
+
+    keys = jax.random.split(key, rounds)
+    (theta_T, _), traj = jax.lax.scan(one_round, (theta0, jnp.asarray(False)), keys)
+    traj = jnp.concatenate([theta0[None], traj], axis=0)
+    return theta_T, traj
+
+
+def make_shards(key, N_per_machine: int, m_workers: int, p: int, theta_star,
+                model: str = "linear", mu_x: float = 0.0,
+                toeplitz_rho: float = 0.5, noise_std: float = 1.0) -> Shards:
+    """Generate the paper's simulation data (Section 4.2), already sharded.
+
+    Covariates ~ N(mu_x, Sigma) with Toeplitz Sigma_ij = rho^|i-j|.
+    """
+    m1 = m_workers + 1
+    kx, ke = jax.random.split(key)
+    idx = jnp.arange(p)
+    Sigma = toeplitz_rho ** jnp.abs(idx[:, None] - idx[None, :])
+    L = jnp.linalg.cholesky(Sigma)
+    Z = jax.random.normal(kx, (m1, N_per_machine, p))
+    X = Z @ L.T + mu_x
+    eta = X @ theta_star
+    if model == "linear":
+        Y = eta + noise_std * jax.random.normal(ke, (m1, N_per_machine))
+    elif model == "logistic":
+        U = jax.random.uniform(ke, (m1, N_per_machine))
+        Y = (U < jax.nn.sigmoid(eta)).astype(jnp.float32)
+    else:
+        raise ValueError(model)
+    return Shards(X=X, Y=Y)
+
+
+def paper_theta_star(p: int) -> jnp.ndarray:
+    """theta* = p^{-1/2} (1, (p-2)/(p-1), (p-3)/(p-1), ..., 0) (Section 4)."""
+    if p == 1:
+        return jnp.ones((1,))
+    ks = jnp.arange(p)
+    vals = jnp.concatenate([jnp.ones((1,)), (p - 1 - ks[1:]) / (p - 1)])
+    return vals / jnp.sqrt(p)

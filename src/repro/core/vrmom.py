@@ -1,0 +1,288 @@
+"""Variance-Reduced Median-of-Means (VRMOM) estimator.
+
+Implements eq. (2) [MOM], eq. (7) [VRMOM] and eq. (9) [asymptotic
+variance sigma_K^2] of Tu, Liu, Mao & Chen (2021), "Variance Reduced
+Median-of-Means Estimator for Byzantine-Robust Distributed Inference".
+
+All estimators act coordinate-wise along a designated *worker* axis of an
+array of per-machine means ``xbar`` with shape ``[m+1, ...]``; up to an
+``alpha < 1/2`` fraction of rows may be arbitrary (Byzantine).
+
+Scale handling
+--------------
+The paper writes the correction in terms of ``sigma_hat / sqrt(n)`` where
+``sigma_hat`` is the per-sample std estimated on the trusted master
+machine H0.  Internally we work with the *mean-level* noise scale
+``s = sigma / sqrt(n)`` (the std of one machine's mean), which is what
+actually enters eq. (7).  Three ways to supply it:
+
+* ``scale='mad'`` (default): robust cross-worker estimate
+  ``s = MAD_j(xbar_j) / ndtri(0.75)`` — itself median-based, hence
+  Byzantine-robust; consistent for sigma/sqrt(n) under the same CLT
+  argument as the paper's. TPU-adaptation documented in DESIGN.md §2.
+* ``scale='master'`` with ``master_samples``: the paper-faithful H0
+  sample std divided by sqrt(n).
+* ``scale=<array>``: explicit ``s`` (broadcastable to ``xbar`` minus the
+  worker axis).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import ndtr, ndtri
+
+__all__ = [
+    "mom",
+    "vrmom",
+    "mad_scale",
+    "master_scale",
+    "deltas",
+    "psi",
+    "psi_sum",
+    "sigma_k_sq",
+    "sigma_mom_sq",
+    "vrmom_correction_bound",
+]
+
+_MAD_CONST = 0.6744897501960817  # ndtri(0.75)
+
+
+def psi(x):
+    """Standard normal pdf."""
+    return jnp.exp(-0.5 * jnp.square(x)) / jnp.sqrt(2.0 * jnp.pi)
+
+
+def _ndtri_np(p):
+    """Inverse normal CDF, pure numpy (host-side; never traced)."""
+    import numpy as np
+
+    try:
+        from scipy.special import ndtri as _sndtri
+
+        return _sndtri(p)
+    except Exception:  # pragma: no cover - scipy-free fallback (Acklam)
+        p = np.asarray(p, dtype=np.float64)
+        a = [-3.969683028665376e01, 2.209460984245205e02, -2.759285104469687e02,
+             1.383577518672690e02, -3.066479806614716e01, 2.506628277459239e00]
+        b = [-5.447609879822406e01, 1.615858368580409e02, -1.556989798598866e02,
+             6.680131188771972e01, -1.328068155288572e01]
+        c = [-7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e00,
+             -2.549732539343734e00, 4.374664141464968e00, 2.938163982698783e00]
+        d = [7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e00,
+             3.754408661907416e00]
+        plow, phigh = 0.02425, 1 - 0.02425
+        x = np.empty_like(p)
+        lo = p < plow
+        hi = p > phigh
+        mid = ~(lo | hi)
+        q = np.sqrt(-2 * np.log(p[lo]))
+        x[lo] = (((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q + c[5]) / (
+            (((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1)
+        q = p[mid] - 0.5
+        r = q * q
+        x[mid] = (((((a[0] * r + a[1]) * r + a[2]) * r + a[3]) * r + a[4]) * r + a[5]) * q / (
+            ((((b[0] * r + b[1]) * r + b[2]) * r + b[3]) * r + b[4]) * r + 1)
+        q = np.sqrt(-2 * np.log(1 - p[hi]))
+        x[hi] = -(((((c[0] * q + c[1]) * q + c[2]) * q + c[3]) * q + c[4]) * q + c[5]) / (
+            (((d[0] * q + d[1]) * q + d[2]) * q + d[3]) * q + 1)
+        return x
+
+
+@functools.lru_cache(maxsize=64)
+def _deltas_cached(K: int):
+    import numpy as np
+
+    taus = np.arange(1, K + 1, dtype=np.float64) / (K + 1)
+    return np.asarray(_ndtri_np(taus), dtype=np.float64)
+
+
+def deltas(K: int, dtype=jnp.float32):
+    """Delta_k = ndtri(k/(K+1)) for k = 1..K."""
+    return jnp.asarray(_deltas_cached(K), dtype=dtype)
+
+
+@functools.lru_cache(maxsize=64)
+def psi_sum(K: int) -> float:
+    """sum_k psi(Delta_k) as a python float."""
+    import numpy as np
+
+    d = _deltas_cached(K)
+    return float(np.sum(np.exp(-0.5 * d * d) / np.sqrt(2.0 * np.pi)))
+
+
+def mom(xbar, axis: int = 0):
+    """Median-of-means, eq. (2): coordinate-wise median over ``axis``."""
+    return jnp.median(xbar, axis=axis)
+
+
+def mad_scale(xbar, axis: int = 0, center=None):
+    """Robust scale of the per-machine means: MAD / ndtri(3/4)."""
+    if center is None:
+        center = jnp.median(xbar, axis=axis, keepdims=True)
+    else:
+        center = jnp.expand_dims(center, axis)
+    return jnp.median(jnp.abs(xbar - center), axis=axis) / _MAD_CONST
+
+
+def master_scale(master_samples, axis: int = 0):
+    """Paper-faithful scale: H0 per-sample std / sqrt(n).
+
+    ``master_samples``: raw per-sample values on the trusted master, shape
+    ``[n, ...]`` along ``axis``. Returns ``sigma_hat / sqrt(n)``.
+    """
+    n = master_samples.shape[axis]
+    sigma = jnp.std(master_samples, axis=axis)
+    return sigma / jnp.sqrt(jnp.asarray(n, master_samples.dtype))
+
+
+def _resolve_scale(xbar, axis, scale, master_samples, mu_hat):
+    if isinstance(scale, str):
+        if scale == "mad":
+            return mad_scale(xbar, axis=axis, center=mu_hat)
+        if scale == "master":
+            if master_samples is None:
+                raise ValueError("scale='master' requires master_samples")
+            return master_scale(master_samples)
+        raise ValueError(f"unknown scale {scale!r}")
+    return jnp.asarray(scale)
+
+
+def vrmom(
+    xbar,
+    K: int = 10,
+    axis: int = 0,
+    scale="mad",
+    master_samples=None,
+    eps: float = 1e-12,
+):
+    """VRMOM estimator, eq. (7) of the paper.
+
+    Args:
+      xbar: per-machine means, worker axis ``axis`` of size m+1.
+      K: number of quantile levels (tau_k = k/(K+1)).
+      scale: 'mad' | 'master' | explicit mean-level scale ``s``.
+      master_samples: raw H0 samples, required iff scale='master'.
+      eps: guards division when the scale is ~0 (constant inputs).
+
+    Returns the estimate with the worker axis removed.
+    """
+    xbar = jnp.asarray(xbar)
+    m1 = xbar.shape[axis]
+    mu_hat = jnp.median(xbar, axis=axis)
+    s = _resolve_scale(xbar, axis, scale, master_samples, mu_hat)
+    s = jnp.broadcast_to(s, mu_hat.shape)
+
+    d = deltas(K, dtype=jnp.promote_types(xbar.dtype, jnp.float32))
+    # z_j = (xbar_j - mu_hat) / s ; summand_j = sum_k 1(z_j <= Delta_k) - K/2
+    z = (xbar - jnp.expand_dims(mu_hat, axis)) / jnp.expand_dims(
+        jnp.maximum(s, eps), axis
+    )
+    # Count via comparisons (exact; avoids ceil edge cases at Phi in {0,1}).
+    z_e = jnp.expand_dims(z, -1)  # [..., 1]
+    counts = jnp.sum(z_e <= d, axis=-1).astype(z.dtype)  # [m+1, ...]
+    summand = counts - K / 2.0
+    total = jnp.sum(summand, axis=axis)
+    corr = s * total / (m1 * psi_sum(K))
+    out = mu_hat - corr
+    # If the scale is degenerate (all-equal inputs) the correction is 0/0;
+    # fall back to the median.
+    return jnp.where(s <= eps, mu_hat, out).astype(xbar.dtype)
+
+
+def vrmom_correction_bound(K: int) -> float:
+    """Deterministic bound: |vrmom - mom| <= s * (K/2) / sum_k psi(Delta_k).
+
+    Follows from |sum_k 1(.) - K/2| <= K/2 per machine (Remark 2)."""
+    return (K / 2.0) / psi_sum(K)
+
+
+# ---------------------------------------------------------------------------
+# Theory: asymptotic variances (eq. 9 and Minsker 2019 for MOM)
+# ---------------------------------------------------------------------------
+
+def sigma_k_sq(K: int) -> float:
+    """sigma_K^2 / sigma^2 from eq. (9). -> pi/3 as K -> inf; K=1 gives pi/2."""
+    import numpy as np
+
+    taus = np.arange(1, K + 1, dtype=np.float64) / (K + 1)
+    t1 = taus[:, None]
+    t2 = taus[None, :]
+    num = np.sum(np.minimum(t1, t2) * (1.0 - np.maximum(t1, t2)))
+    den = float(psi_sum(K)) ** 2
+    return float(num / den)
+
+
+def sigma_mom_sq() -> float:
+    """MOM asymptotic variance factor: pi/2 (Minsker 2019)."""
+    return math.pi / 2.0
+
+
+# ---------------------------------------------------------------------------
+# Theorem 4 / Proposition 1: multivariate asymptotic covariance matrices
+# ---------------------------------------------------------------------------
+
+def _phi2_cdf_grid(a, b, rho, n_grid: int = 2001, lim: float = 8.0):
+    """P(Z1 <= a, Z2 <= b) for standard bivariate normal with corr rho,
+    via P = int_{-lim}^{a} phi(z) Phi((b - rho z)/sqrt(1-rho^2)) dz
+    (host-side numpy quadrature; exact enough for the tests)."""
+    import numpy as np
+
+    if abs(rho) >= 1.0 - 1e-12:
+        if rho > 0:  # P(Z <= min(a, b))
+            return 0.5 * (1 + math.erf(min(a, b) / math.sqrt(2.0)))
+        # rho = -1: P(Z <= a, -Z <= b) = P(-b <= Z <= a)
+        return max(0.0, 0.5 * (math.erf(a / math.sqrt(2))
+                               + math.erf(b / math.sqrt(2))))
+    z = np.linspace(-lim, min(a, lim), n_grid)
+    phi = np.exp(-0.5 * z * z) / np.sqrt(2 * np.pi)
+    arg = (b - rho * z) / math.sqrt(1.0 - rho * rho)
+    Phi = 0.5 * (1.0 + np.vectorize(math.erf)(arg / np.sqrt(2.0)))
+    return float(np.trapezoid(phi * Phi, z))
+
+
+def vrmom_asymptotic_cov(Sigma, K: int):
+    """The matrix C of Theorem 4 (eq. 13/14): sqrt(N)(mu_bar - mu) -> N(0, C).
+
+    Sigma: [p, p] covariance of X. Host-side numpy (theory utility).
+    """
+    import numpy as np
+
+    Sigma = np.asarray(Sigma, dtype=np.float64)
+    p = Sigma.shape[0]
+    sd = np.sqrt(np.diag(Sigma))
+    corr = Sigma / np.outer(sd, sd)
+    d = _deltas_cached(K)
+    taus = np.arange(1, K + 1, dtype=np.float64) / (K + 1)
+    den = psi_sum(K) ** 2
+    C = np.zeros((p, p))
+    for l1 in range(p):
+        for l2 in range(l1, p):
+            rho = float(np.clip(corr[l1, l2], -1.0, 1.0))
+            acc = 0.0
+            for k1 in range(K):
+                for k2 in range(K):
+                    t12 = _phi2_cdf_grid(d[k1], d[k2], rho)
+                    acc += t12 - taus[k1] * taus[k2]
+            C[l1, l2] = C[l2, l1] = acc / den * sd[l1] * sd[l2]
+    return C
+
+
+def mom_asymptotic_cov(Sigma):
+    """C_MOM of Proposition 1 (eq. 17)."""
+    import numpy as np
+
+    Sigma = np.asarray(Sigma, dtype=np.float64)
+    p = Sigma.shape[0]
+    sd = np.sqrt(np.diag(Sigma))
+    corr = Sigma / np.outer(sd, sd)
+    C = np.zeros((p, p))
+    for l1 in range(p):
+        for l2 in range(l1, p):
+            rho = float(np.clip(corr[l1, l2], -1.0, 1.0))
+            t = _phi2_cdf_grid(0.0, 0.0, rho)
+            C[l1, l2] = C[l2, l1] = (2 * np.pi * t - np.pi / 2) \
+                * sd[l1] * sd[l2]
+    return C

@@ -1,0 +1,56 @@
+"""Synthetic data pipelines.
+
+Deterministic PRNG-derived token streams (LM training) and the paper's
+GLM simulation data (re-exported from core.rcsl). Batches are produced
+host-side per step from a counter so the pipeline is restartable from a
+checkpointed step; ``shard_batch`` places a global batch according to the
+mesh batch axes.
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.rcsl import Shards, make_shards, paper_theta_star  # noqa: F401
+
+
+def lm_batch(cfg, step: int, batch: int, seq: int, seed: int = 0):
+    """Synthetic-but-structured LM batch: a noisy integer AR process, so
+    the model has something learnable (next token correlates with prev)."""
+    rng = np.random.default_rng(np.uint64(seed * 1_000_003 + step))
+    drift = rng.integers(1, 7, size=(batch, 1))
+    start = rng.integers(0, cfg.vocab, size=(batch, 1))
+    noise = rng.integers(0, 3, size=(batch, seq))
+    toks = (start + drift * np.arange(seq)[None, :] + noise) % cfg.vocab
+    out = {"tokens": jnp.asarray(toks, jnp.int32)}
+    if cfg.family == "encdec":
+        f = rng.standard_normal((batch, cfg.encoder.n_frames, cfg.d_model))
+        out["frames"] = jnp.asarray(f, jnp.dtype(cfg.compute_dtype))
+    elif cfg.family == "vlm":
+        n = cfg.vision.n_patches
+        p = rng.standard_normal((batch, n, cfg.d_model))
+        out["patches"] = jnp.asarray(p, jnp.dtype(cfg.compute_dtype))
+        out["tokens"] = out["tokens"][:, : seq - n]
+    return out
+
+
+def lm_stream(cfg, batch: int, seq: int, seed: int = 0,
+              start_step: int = 0) -> Iterator[dict]:
+    step = start_step
+    while True:
+        yield lm_batch(cfg, step, batch, seq, seed)
+        step += 1
+
+
+def shard_batch(batch: dict, mesh, batch_axes):
+    """Place a host batch onto the mesh, batch dim sharded over batch_axes."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def place(x):
+        spec = P(batch_axes, *([None] * (x.ndim - 1)))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(place, batch)

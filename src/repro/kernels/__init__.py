@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the paper's aggregation hot-spot."""
+from . import ops, ref
+from .ops import robust_aggregate
+from .vrmom import mom_pallas, vrmom_pallas

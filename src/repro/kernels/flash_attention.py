@@ -1,0 +1,144 @@
+"""Flash-attention forward Pallas kernel (online softmax).
+
+Motivated by the §Roofline result that every prefill_32k pair is
+memory-bound on f32 score traffic: the fused kernel keeps the running
+(m, l, acc) softmax state in VMEM scratch and never writes scores to HBM
+— one pass over K/V per query block instead of materializing
+[blk_q, T] f32 three times (scores, probs, and their backward copies).
+
+Layout: grid (B*H, n_q_blocks, n_kv_blocks); the kv grid axis is the
+innermost (sequential on TPU), accumulating into scratch; the output
+block is written on the last kv step. Blocks are VMEM-resident
+([blk, dh] with dh = 64..128, MXU-aligned).
+
+Validated against ref.ref_attention in interpret mode (CPU) across
+shapes/dtypes/causality — tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, blk_q, blk_k, n_k):
+    ki = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)  # [blk_q, dh]
+    k = k_ref[0].astype(jnp.float32)  # [blk_k, dh]
+    v = v_ref[0].astype(jnp.float32)
+    s = jnp.dot(q, k.T) * scale  # [blk_q, blk_k] f32
+
+    if causal:
+        q_pos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1)
+    acc = acc_scr[...] * alpha[:, None] + jnp.dot(p, v)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "blk_q", "blk_k",
+                                             "interpret"))
+def _flash_bh(q, k, v, causal, blk_q, blk_k, interpret):
+    """q: [BH, S, dh]; k/v: [BH, T, dh] -> [BH, S, dh]."""
+    BH, S, dh = q.shape
+    T = k.shape[1]
+    blk_q = min(blk_q, S)
+    blk_k = min(blk_k, T)
+    pad_q = (-S) % blk_q
+    pad_k = (-T) % blk_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        # padded keys masked out via causal/NEG_INF? non-causal needs an
+        # explicit mask: pad with a huge negative bias trick instead —
+        # simplest correct approach: pad k with zeros and rely on the
+        # validity mask below.
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    Sq, Tk = S + pad_q, T + pad_k
+    n_q, n_k = Sq // blk_q, Tk // blk_k
+    scale = 1.0 / (dh ** 0.5)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal or pad_k > 0, blk_q=blk_q,
+        blk_k=blk_k, n_k=n_k)
+    # note: for the pad_k-only case we still use the positional mask to
+    # exclude padded keys (causal=True with q_pos >= T-1 keeps them out
+    # only when causal; for pure non-causal pads we fall back below).
+    if pad_k and not causal:
+        # non-causal with padding: mask via explicit validity not
+        # supported in-kernel; compute unpadded reference path instead.
+        return None
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, blk_k, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, blk_k, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :S]
+
+
+def flash_attention(q, k, v, *, causal=True, blk_q=256, blk_k=256,
+                    interpret=None):
+    """q: [B, S, H, dh]; k/v: [B, T, Hkv, dh] -> [B, S, H, dh].
+
+    GQA handled by repeating kv to H (head axis folded into the grid).
+    Falls back to the jnp reference when the shape can't be expressed
+    (non-causal with non-divisible T).
+    """
+    from . import ref as _ref
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, S, H, dh = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    if H != Hkv:
+        k = jnp.repeat(k, H // Hkv, axis=2)
+        v = jnp.repeat(v, H // Hkv, axis=2)
+    qf = jnp.moveaxis(q, 2, 1).reshape(B * H, S, dh)
+    kf = jnp.moveaxis(k, 2, 1).reshape(B * H, T, dh)
+    vf = jnp.moveaxis(v, 2, 1).reshape(B * H, T, dh)
+    out = _flash_bh(qf, kf, vf, causal, blk_q, blk_k, bool(interpret))
+    if out is None:
+        return _ref.ref_attention(q, k, v, causal=causal)
+    return jnp.moveaxis(out.reshape(B, H, S, dh), 1, 2)

@@ -1,0 +1,28 @@
+"""Public jit'd entry points for the aggregation kernels.
+
+``use_pallas=False`` falls back to the pure-jnp reference (used inside
+shard_map on sub-tile chunks, and on backends without Pallas support).
+On CPU the Pallas path runs in interpret mode automatically.
+"""
+from __future__ import annotations
+
+from . import ref
+from .vrmom import mom_pallas, vrmom_pallas
+
+__all__ = ["robust_aggregate", "vrmom_pallas", "mom_pallas"]
+
+
+def robust_aggregate(x, method: str = "vrmom", K: int = 10,
+                     use_pallas: bool = True, interpret=None):
+    """Aggregate [m, ...] -> [...] with the fused kernel or the oracle."""
+    if method == "vrmom":
+        if use_pallas:
+            return vrmom_pallas(x, K=K, interpret=interpret)
+        shape = x.shape[1:]
+        return ref.ref_vrmom(x.reshape(x.shape[0], -1), K=K).reshape(shape)
+    if method in ("mom", "median"):
+        if use_pallas:
+            return mom_pallas(x, interpret=interpret)
+        shape = x.shape[1:]
+        return ref.ref_mom(x.reshape(x.shape[0], -1)).reshape(shape)
+    raise ValueError(f"unknown method {method!r}")

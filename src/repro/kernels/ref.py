@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the aggregation kernels.
+
+These are the reference semantics the Pallas kernels must match:
+coordinate-wise MOM / VRMOM over the leading (worker) axis with the
+MAD-based scale (DESIGN.md §2). Median over an even worker count is the
+average of the two middle order statistics (numpy convention).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vrmom import deltas, psi_sum
+
+_MAD_CONST = 0.6744897501960817  # ndtri(0.75)
+
+
+def ref_mom(x):
+    """x: [M, C] -> [C] coordinate-wise median."""
+    return jnp.median(x.astype(jnp.float32), axis=0).astype(x.dtype)
+
+
+def ref_vrmom(x, K: int = 10, eps: float = 1e-12):
+    """x: [M, C] -> [C] VRMOM (eq. 7) with MAD scale."""
+    xf = x.astype(jnp.float32)
+    M = xf.shape[0]
+    med = jnp.median(xf, axis=0)
+    mad = jnp.median(jnp.abs(xf - med[None, :]), axis=0)
+    s = mad / _MAD_CONST
+    z = (xf - med[None, :]) / jnp.maximum(s, eps)[None, :]
+    d = deltas(K, dtype=jnp.float32)
+    counts = jnp.sum(z[..., None] <= d, axis=-1).astype(jnp.float32)
+    total = jnp.sum(counts - K / 2.0, axis=0)
+    out = med - s * total / (M * psi_sum(K))
+    return jnp.where(s <= eps, med, out).astype(x.dtype)
+
+
+def ref_attention(q, k, v, causal: bool = True):
+    """Plain softmax attention oracle. q: [B,S,H,dh], k/v: [B,T,H,dh]."""
+    B, S, H, dh = q.shape
+    T = k.shape[1]
+    s = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (dh ** 0.5)
+    if causal:
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,4 @@
+"""Launchers: mesh, dryrun (import sets 512 host devices!), sweep,
+report, train. NOTE: do not import .dryrun from a process that needs
+real device topology — it pins XLA_FLAGS at import time by design."""
+from . import mesh

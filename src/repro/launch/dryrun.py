@@ -1,0 +1,271 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", "")
+)
+# ^ MUST run before any other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production meshes with ShapeDtypeStruct stand-ins (no allocation), print
+memory_analysis / cost_analysis, and extract collective bytes from the
+HLO for the roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+      --shape train_4k [--multi-pod] [--mode stacked-rrs] [--json out.json]
+"""
+import argparse
+import json
+import re
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get as get_arch, input_specs
+from repro.dist import sharding as S
+from repro.launch import hlo_cost
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.train.step import make_serve_steps, make_train_step
+
+# v5e hardware constants for the roofline (system brief)
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*\S+ = (\S+?) (all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)", re.M)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+
+def _bytes_of_shape(stype: str) -> int:
+    """Sum byte size over a (possibly tuple) HLO shape string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(stype):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by collectives, summed by op kind."""
+    out = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        stype, kind = m.group(1), m.group(2)
+        out[kind] = out.get(kind, 0) + _bytes_of_shape(stype)
+    return out
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+
+def _active_params(cfg) -> float:
+    """Analytic active-parameter count (no allocation)."""
+    import jax as _jax
+    shapes = M.abstract_init(cfg)
+    total = sum(x.size for x in _jax.tree.leaves(shapes))
+    if cfg.moe is not None:
+        # expert weights: [E, D, F] x2 + [E, F, D] per layer
+        e, k = cfg.moe.n_experts, cfg.moe.top_k
+        expert = cfg.n_layers * 3 * e * cfg.d_model * cfg.d_ff
+        total -= expert * (1 - k / e)
+    return float(total)
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               mode: str = "stacked-rrs", verbose: bool = True,
+               save_hlo: str = None) -> dict:
+    cfg = get_arch(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = 1
+    for a in mesh.axis_names:
+        n_chips *= mesh.shape[a]
+
+    # long_500k policy (DESIGN.md §4): native for sub-quadratic archs,
+    # SWA-4096 variant for full-attention archs.
+    window = "cfg"
+    variant = ""
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        window = 4096
+        variant = "swa4096-variant"
+    # stacked mode floor: one worker's full f32 gradient, model-sharded
+    # only (N*4/tp bytes/chip). Switch to IB-RRS when that alone nears
+    # HBM (llama3-405b: 101 GB; mixtral-8x7b: 11.7 GB).
+    if shape.kind == "train" and mode.startswith("stacked"):
+        n_params = _active_params(cfg) if cfg.moe is None else float(
+            sum(x.size for x in jax.tree.leaves(M.abstract_init(cfg))))
+        tp = mesh.shape["model"]
+        if n_params * 4.0 / tp > 4e9:
+            mode = "inloop"
+
+    params_shapes = M.abstract_init(cfg)
+    params_specs = S.param_specs(params_shapes, mesh)
+    params_sh = _named(mesh, params_specs)
+    params_in = jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        params_shapes, params_sh)
+
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        setup = make_train_step(cfg, mesh, mode=mode)
+        import repro.optim as O
+        optimizer = O.get(cfg.optimizer, lr=1e-3)
+        opt_shapes = jax.eval_shape(optimizer.init, params_shapes)
+        opt_sh = _named(mesh, setup.opt_specs)
+        opt_in = jax.tree.map(
+            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+            opt_shapes, opt_sh)
+        batch_sh = _named(mesh, S.batch_specs(specs, setup.batch_axes))
+        batch_in = jax.tree.map(
+            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+            specs, batch_sh)
+        key_in = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        lowered = jax.jit(
+            setup.step_fn, donate_argnums=(0, 1),
+            out_shardings=(params_sh, opt_sh, None),
+        ).lower(params_in, opt_in, batch_in, key_in)
+    elif shape.kind == "prefill":
+        prefill_fn, _, _, _, batch_axes = make_serve_steps(
+            cfg, mesh, shape=shape, window=window)
+        batch_sh = _named(mesh, S.batch_specs(specs, batch_axes))
+        batch_in = jax.tree.map(
+            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+            specs, batch_sh)
+        _, _, cache_shapes, cache_spec_fn, _ = make_serve_steps(
+            cfg, mesh, shape=shape, window=window)
+        csp = _named(mesh, cache_spec_fn())
+        logit_sh = NamedSharding(
+            mesh, P(batch_axes, None,
+                    "model" if cfg.vocab % mesh.shape["model"] == 0 else None))
+        lowered = jax.jit(
+            prefill_fn, out_shardings=(logit_sh, csp),
+        ).lower(params_in, batch_in)
+    else:  # decode
+        _, decode_fn, cache_shapes, cache_spec_fn, batch_axes = \
+            make_serve_steps(cfg, mesh, shape=shape, window=window)
+        cs = cache_shapes()
+        csp = _named(mesh, cache_spec_fn())
+        cache_in = jax.tree.map(
+            lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+            cs, csp)
+        tok_sh = NamedSharding(mesh, P(batch_axes))
+        tok_in = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32,
+                                      sharding=tok_sh)
+        logit_sh = NamedSharding(
+            mesh, P(batch_axes,
+                    "model" if cfg.vocab % mesh.shape["model"] == 0 else None))
+        lowered = jax.jit(
+            decode_fn, donate_argnums=(1,),
+            out_shardings=(logit_sh, csp),
+        ).lower(params_in, cache_in, tok_in)
+
+    compiled = lowered.compile()
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(compiled.as_text())
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # Trip-count-aware totals (XLA's cost_analysis counts while bodies
+    # once -- see hlo_cost module docstring). xla_* fields keep the raw
+    # XLA numbers for cross-checking.
+    hc = hlo_cost.analyze(hlo)
+    flops = hc["flops"]
+    bytes_hbm = hc["bytes"]
+    coll = hc["collectives"]
+    coll_total = hc["collective_bytes"]
+
+    # analytic MODEL_FLOPS = 6 * N_active * tokens (fwd+bwd) or 2*N*tokens (fwd)
+    cfg_obj = cfg
+    n_active = _active_params(cfg_obj)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops_global = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops_global = 2.0 * n_active * tokens
+    else:
+        tokens = shape.global_batch  # one token per sequence
+        model_flops_global = 2.0 * n_active * tokens
+    model_flops_per_chip = model_flops_global / n_chips
+
+    # roofline terms (seconds, per device program = per chip)
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_hbm / HBM_BW
+    t_collective = coll_total / LINK_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    bottleneck = max(terms, key=terms.get)
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips, "mode": mode, "variant": variant,
+        "flops_per_chip": flops, "hbm_bytes_per_chip": bytes_hbm,
+        "collective_bytes_per_chip": coll_total,
+        "collectives": coll,
+        "model_flops_per_chip": model_flops_per_chip,
+        "useful_flops_ratio": model_flops_per_chip / max(flops, 1.0),
+        "xla_flops": float(cost.get("flops", 0.0)),
+        "xla_bytes": float(cost.get("bytes accessed", 0.0)),
+        **terms,
+        "bottleneck": bottleneck.replace("_s", ""),
+        "peak_memory_bytes": getattr(mem, "temp_size_in_bytes", 0)
+        + getattr(mem, "argument_size_in_bytes", 0)
+        + getattr(mem, "output_size_in_bytes", 0)
+        - getattr(mem, "alias_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} on {result['mesh']} "
+              f"(mode={mode}{' ' + variant if variant else ''}) ==")
+        print("memory_analysis:", mem)
+        print("cost_analysis: flops={:.3e} bytes={:.3e}".format(
+            flops, bytes_hbm))
+        print("collectives:", {k: f"{v:.3e}" for k, v in coll.items()})
+        print("model_flops/chip={:.3e} useful_ratio={:.3f}".format(
+            model_flops_per_chip, result["useful_flops_ratio"]))
+        print("roofline: compute={:.3e}s memory={:.3e}s collective={:.3e}s"
+              " -> bottleneck={}".format(
+                  t_compute, t_memory, t_collective, result["bottleneck"]))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True,
+                    choices=sorted(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", default="stacked-rrs")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+    res = dryrun_one(args.arch, args.shape, multi_pod=args.multi_pod,
+                     mode=args.mode, save_hlo=args.save_hlo)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

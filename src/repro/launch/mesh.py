@@ -1,0 +1,23 @@
+"""Production mesh definitions.
+
+A FUNCTION (not a module-level constant) so importing never touches jax
+device state. Single pod: (data=16, model=16) = 256 chips. Multi-pod:
+(pod=2, data=16, model=16) = 512 chips; the pod axis joins the worker
+axis of the robust aggregation and shards the batch.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 4, model: int = 2, pod: int = 1):
+    """Small mesh for CPU multi-device tests (host platform devices)."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

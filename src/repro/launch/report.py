@@ -1,0 +1,99 @@
+"""Render the §Dry-run / §Roofline tables from results/dryrun/*.json.
+
+  PYTHONPATH=src python -m repro.launch.report [--dir results/dryrun] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ORDER_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ORDER_ARCHS = ["whisper-medium", "qwen3-1.7b", "starcoder2-7b",
+               "phi-3-vision-4.2b", "zamba2-7b", "granite-moe-3b-a800m",
+               "minitron-4b", "mamba2-2.7b", "mixtral-8x7b", "llama3-405b"]
+
+
+def load(dir_):
+    out = {}
+    for f in glob.glob(os.path.join(dir_, "*.json")):
+        try:
+            d = json.load(open(f))
+        except Exception:
+            continue
+        out[(d["arch"], d["shape"], d["mesh"])] = d
+    return out
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    for unit, scale in (("s", 1.0), ("ms", 1e-3), ("us", 1e-6)):
+        if x >= scale:
+            return f"{x/scale:.2f}{unit}"
+    return f"{x:.1e}s"
+
+
+def roofline_table(res, mesh="16x16", md=True):
+    hdr = ["arch", "shape", "mode", "compute", "memory", "collective",
+           "bottleneck", "useful", "peakGB", "fits16G"]
+    rows = []
+    for arch in ORDER_ARCHS:
+        for shape in ORDER_SHAPES:
+            d = res.get((arch, shape, mesh))
+            if d is None:
+                rows.append([arch, shape, "MISSING"] + [""] * 7)
+                continue
+            peak = d["peak_memory_bytes"] / 1e9
+            rows.append([
+                arch, shape,
+                d["mode"] + (f" [{d['variant']}]" if d["variant"] else ""),
+                fmt_s(d["compute_s"]), fmt_s(d["memory_s"]),
+                fmt_s(d["collective_s"]), d["bottleneck"],
+                f"{d['useful_flops_ratio']:.2f}", f"{peak:.1f}",
+                "yes" if peak <= 16.0 else "NO",
+            ])
+    if md:
+        lines = ["| " + " | ".join(hdr) + " |",
+                 "|" + "---|" * len(hdr)]
+        for r in rows:
+            lines.append("| " + " | ".join(str(x) for x in r) + " |")
+        return "\n".join(lines)
+    w = [max(len(str(r[i])) for r in [hdr] + rows) for i in range(len(hdr))]
+    lines = ["  ".join(str(h).ljust(w[i]) for i, h in enumerate(hdr))]
+    for r in rows:
+        lines.append("  ".join(str(x).ljust(w[i]) for i, x in enumerate(r)))
+    return "\n".join(lines)
+
+
+def multipod_status(res):
+    lines = []
+    for arch in ORDER_ARCHS:
+        row = [arch]
+        for shape in ORDER_SHAPES:
+            d = res.get((arch, shape, "2x16x16"))
+            row.append("ok" if d else "-")
+        lines.append(row)
+    out = ["| arch | " + " | ".join(ORDER_SHAPES) + " |",
+           "|" + "---|" * 5]
+    for r in lines:
+        out.append("| " + " | ".join(r) + " |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    res = load(args.dir)
+    print(f"# loaded {len(res)} results from {args.dir}\n")
+    print("## Roofline (single-pod 16x16, per chip)\n")
+    print(roofline_table(res, "16x16", md=args.md))
+    print("\n## Multi-pod (2x16x16) compile status\n")
+    print(multipod_status(res))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Run the full (arch x shape x mesh) dry-run sweep, one subprocess per
+combo (jax device count is locked per process), resumable via JSON files.
+
+  PYTHONPATH=src python -m repro.launch.sweep --out results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = ["qwen3-1.7b", "mamba2-2.7b", "granite-moe-3b-a800m", "minitron-4b",
+         "phi-3-vision-4.2b", "whisper-medium", "starcoder2-7b",
+         "mixtral-8x7b", "zamba2-7b", "llama3-405b"]
+SHAPES = ["decode_32k", "long_500k", "prefill_32k", "train_4k"]
+
+
+def combos(include_multipod=True):
+    for multi in ([False, True] if include_multipod else [False]):
+        for shape in SHAPES:
+            for arch in ARCHS:
+                yield arch, shape, multi
+
+
+def run_one(arch, shape, multi, out_dir, timeout=2400):
+    mesh = "2x16x16" if multi else "16x16"
+    name = f"{arch}__{shape}__{mesh}.json"
+    path = os.path.join(out_dir, name)
+    if os.path.exists(path):
+        return "cached", path
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--json", path]
+    if multi:
+        cmd.append("--multi-pod")
+    env = dict(os.environ)
+    env.setdefault("PYTHONPATH", "src")
+    t0 = time.time()
+    try:
+        r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                           timeout=timeout)
+    except subprocess.TimeoutExpired:
+        with open(path + ".err", "w") as f:
+            f.write("TIMEOUT")
+        return "timeout", path
+    if r.returncode != 0:
+        with open(path + ".err", "w") as f:
+            f.write(r.stdout[-3000:] + "\n=== STDERR ===\n" + r.stderr[-6000:])
+        return "failed", path
+    return f"ok({time.time()-t0:.0f}s)", path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--single-pod-only", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    todo = list(combos(include_multipod=not args.single_pod_only))
+    for i, (arch, shape, multi) in enumerate(todo):
+        status, path = run_one(arch, shape, multi, args.out)
+        print(f"[{i+1}/{len(todo)}] {arch} x {shape} x "
+              f"{'2x16x16' if multi else '16x16'}: {status}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Model zoo: dense / MoE / SSM / hybrid / enc-dec / VLM backbones."""
+from . import attention, hybrid, layers, mamba2, model, moe, transformer, whisper
+from .model import decode_step, init, init_cache, loss, prefill

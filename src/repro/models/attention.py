@@ -1,0 +1,226 @@
+"""GQA attention: chunked (flash-style) full-sequence path + cached decode.
+
+Memory design: scores are never materialized at [B, H, S, S]; the query
+axis is processed in blocks of ``cfg.attn_chunk`` via lax.scan, keeping
+the live buffer at [B, Hkv, Hq/Hkv, blk, T]. GQA is computed grouped
+(no repeat of K/V). Sliding-window masking supports Mixtral-style SWA
+and the long_500k dense variant; decode uses a ring-buffer cache when a
+window is set.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rmsnorm, rope
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # [B, T, Hkv, dh] (T = max_len or window size)
+    v: jnp.ndarray
+    pos: jnp.ndarray  # [] int32 — number of tokens already written
+
+
+def attn_init(key, cfg, d_model=None, cross: bool = False):
+    d = d_model or cfg.d_model
+    dh = cfg.head_dim
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.n_heads, dh), dt, fan_in=d),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads, dh), dt, fan_in=d),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads, dh), dt, fan_in=d),
+        "wo": dense_init(ks[3], (cfg.n_heads, dh, d), dt, fan_in=cfg.n_heads * dh),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), dt)
+        p["k_norm"] = jnp.ones((dh,), dt)
+    return p
+
+
+def _proj(x, w3):
+    """[B,S,D] @ [D,H,dh] via the IB-RRS-aware 2-D dot."""
+    from .layers import _dot
+
+    D, H, dh = w3.shape
+    return _dot(x, w3.reshape(D, H * dh)).reshape(x.shape[:-1] + (H, dh))
+
+
+def _qkv(p, x, cfg, positions, kv_x=None):
+    kv_x = x if kv_x is None else kv_x
+    q = _proj(x, p["wq"])
+    k = _proj(kv_x, p["wk"])
+    v = _proj(kv_x, p["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope and positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def mha(q, k, v, *, causal: bool, window: Optional[int], chunk: int,
+        q_offset=0, kv_len: Optional[jnp.ndarray] = None):
+    """Chunked multi-head attention, TP-aware.
+
+    q: [B, S, H, dh]; k/v: [B, T, Hkv, dh]. ``q_offset``: absolute
+    position of q[0] relative to k[0]. ``kv_len``: optional valid kv
+    length (decode with a partially-filled cache). Returns [B, S, H, dh].
+
+    Sharding design (DESIGN.md §5): K/V are repeated to H query heads
+    (GQA groups are NOT computed via a reshape of the head axis — a
+    reshape of a sharded 16-head axis into [8, 2] forces GSPMD to
+    replicate; the repeat keeps a plain head axis that shards cleanly).
+    When H doesn't divide the model axis (starcoder2's 36, minitron's
+    24), heads are zero-padded up to the next multiple — ~1.3x attention
+    flops on those archs, traded for an exact head-sharded layout.
+    """
+    from ..dist import ctx
+
+    B, S, H, dh = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32)).astype(q.dtype)
+    rep = H // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    tp = ctx.axis_size("model")
+    Hp = -(-H // tp) * tp
+    if Hp != H:
+        padh = ((0, 0), (0, 0), (0, Hp - H), (0, 0))
+        q = jnp.pad(q, padh)
+        k = jnp.pad(k, padh)
+        v = jnp.pad(v, padh)
+    if tp > 1:
+        q = ctx.constrain(q, ctx.U, ctx.U, "model", None)
+        k = ctx.constrain(k, ctx.U, ctx.U, "model", None)
+        v = ctx.constrain(v, ctx.U, ctx.U, "model", None)
+
+    chunk = min(chunk, S)
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else q
+    qp = qp.reshape(B, n_chunks, chunk, Hp, dh)
+    kv_pos = jnp.arange(T)
+
+    def body(_, qc_i):
+        qc, i = qc_i
+        q_pos = q_offset + i * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bshd,bthd->bhst", qc * scale, k).astype(jnp.float32)
+        mask = jnp.ones((chunk, T), bool)
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= kv_pos[None, :] > q_pos[:, None] - window
+        if kv_len is not None:
+            mask &= kv_pos[None, :] < kv_len
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        return None, jnp.einsum("bhst,bthd->bshd", p, v)
+
+    # Remat the chunk body: without it, the backward of the chunk scan
+    # stacks every chunk's f32 scores/probs ([n_chunks, blk, T] live at
+    # once); with it, scores are recomputed per chunk in the backward.
+    body_fn = jax.checkpoint(body) if n_chunks > 1 else body
+    _, out = jax.lax.scan(
+        body_fn, None, (jnp.moveaxis(qp, 1, 0), jnp.arange(n_chunks))
+    )
+    out = jnp.moveaxis(out, 0, 1).reshape(B, n_chunks * chunk, Hp, dh)
+    return out[:, :S, :H]
+
+
+def attn_forward(p, x, cfg, *, positions, causal=True, window="cfg",
+                 kv_x=None, make_cache=False, cache_len=None):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    Returns (out [B,S,D], cache or None). ``window`` overrides
+    cfg.sliding_window when given explicitly.
+    """
+    window = cfg.sliding_window if window == "cfg" else window
+    q, k, v = _qkv(p, x, cfg, positions, kv_x=kv_x)
+    out = mha(q, k, v, causal=causal, window=window, chunk=cfg.attn_chunk)
+    from .layers import _dot
+    H, dh, D = p["wo"].shape
+    out = _dot(out.reshape(out.shape[:2] + (H * dh,)), p["wo"].reshape(H * dh, D))
+    cache = None
+    if make_cache:
+        S = k.shape[1]
+        if window:
+            # Ring cache of exactly `window` slots; position p lives at
+            # slot p % window so decode can keep writing in ring order.
+            w = window
+            if S >= w:
+                ck = jnp.roll(k[:, -w:], S % w, axis=1)
+                cv = jnp.roll(v[:, -w:], S % w, axis=1)
+            else:
+                padw = ((0, 0), (0, w - S), (0, 0), (0, 0))
+                ck, cv = jnp.pad(k, padw), jnp.pad(v, padw)
+        else:
+            T = cache_len or S
+            if T == S:
+                ck, cv = k, v
+            elif T > S:
+                padw = ((0, 0), (0, T - S), (0, 0), (0, 0))
+                ck, cv = jnp.pad(k, padw), jnp.pad(v, padw)
+            else:
+                ck, cv = k[:, :T], v[:, :T]
+        cache = KVCache(k=ck, v=cv, pos=jnp.asarray(S, jnp.int32))
+    return out, cache
+
+
+def init_cache(cfg, batch: int, max_len: int, window: Optional[int] = None,
+               d_model=None):
+    """Empty KV cache. With a window, the cache is a ring of that size."""
+    T = min(window, max_len) if window else max_len
+    dt = jnp.dtype(cfg.compute_dtype)
+    shape = (batch, T, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(
+        k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt),
+        pos=jnp.asarray(0, jnp.int32),
+    )
+
+
+def attn_decode(p, x1, cfg, cache: KVCache, *, window="cfg"):
+    """Single-token decode. x1: [B, 1, D]. Returns (out [B,1,D], cache)."""
+    window = cfg.sliding_window if window == "cfg" else window
+    pos = cache.pos
+    positions = pos[None, None] * jnp.ones((x1.shape[0], 1), jnp.int32)
+    q, k, v = _qkv(p, x1, cfg, positions)
+    T = cache.k.shape[1]
+    slot = jnp.mod(pos, T) if window else jnp.minimum(pos, T - 1)
+    ck = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+    if window:
+        # Ring buffer: all T slots valid once pos >= T; positions of slots
+        # don't matter for masking beyond validity (window == ring size).
+        kv_len = jnp.minimum(pos + 1, T)
+        out = mha(q, ck, cv, causal=False, window=None, chunk=1,
+                  q_offset=0, kv_len=kv_len)
+    else:
+        out = mha(q, ck, cv, causal=False, window=None, chunk=1,
+                  q_offset=0, kv_len=pos + 1)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, KVCache(k=ck, v=cv, pos=pos + 1)
+
+
+def cross_attn_decode(p, x1, cfg, cross_kv: KVCache):
+    """Decode-time cross attention over a fixed encoder cache."""
+    q = jnp.einsum("bsd,dhk->bshk", x1, p["wq"])
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+    out = mha(q, cross_kv.k, cross_kv.v, causal=False, window=None, chunk=1)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def make_cross_cache(p, enc_out, cfg):
+    """Precompute K/V over encoder output for decode-time cross attention."""
+    k = jnp.einsum("btd,dhk->bthk", enc_out, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", enc_out, p["wv"])
+    if cfg.qk_norm:
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return KVCache(k=k, v=v, pos=jnp.asarray(enc_out.shape[1], jnp.int32))

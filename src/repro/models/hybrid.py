@@ -1,0 +1,185 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared attention block
+applied every ``cfg.hybrid_attn_every`` layers (arXiv:2411.15242).
+
+Faithful-to-structure simplifications (DESIGN.md §4): the shared block's
+input is concat(hidden, initial_embedding) -> down-projection -> attn +
+MLP (Zamba's concatenated-residual trick); per-application LoRA deltas
+are omitted. The shared block's KV cache is distinct per application.
+
+Layout: G = n_layers // every groups of ``every`` mamba layers, each
+followed by the shared block; ``tail`` remaining mamba layers at the end.
+Both levels are scanned.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import mamba2 as M
+from .layers import dense_init, embed_init, mlp_init, rmsnorm, swiglu
+
+
+class HybridCache(NamedTuple):
+    mamba_g: any   # grouped mamba caches, leaves [G, every, ...]
+    attn_g: any    # shared-block KV caches, leaves [G, ...]
+    mamba_t: any   # tail mamba caches, leaves [tail, ...]
+
+
+def _split(cfg):
+    every = cfg.hybrid_attn_every
+    G = cfg.n_layers // every
+    tail = cfg.n_layers - G * every
+    return every, G, tail
+
+
+def init(key, cfg):
+    every, G, tail = _split(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+
+    def m_init(k):
+        return {"norm": jnp.ones((cfg.d_model,), dt),
+                "ssm": M.mamba2_init(k, cfg)}
+
+    mg_keys = jax.random.split(ks[0], G * every).reshape(G, every, 2)
+    mamba_g = jax.vmap(jax.vmap(m_init))(mg_keys)
+    mamba_t = jax.vmap(m_init)(jax.random.split(ks[1], max(tail, 1)))
+    shared = {
+        "in_proj": dense_init(ks[2], (2 * cfg.d_model, cfg.d_model), dt),
+        "norm_attn": jnp.ones((cfg.d_model,), dt),
+        "attn": A.attn_init(ks[3], cfg),
+        "norm_ffn": jnp.ones((cfg.d_model,), dt),
+        "mlp": mlp_init(ks[4], cfg.d_model, cfg.d_ff, dt),
+    }
+    return {
+        "embed": embed_init(ks[5], (cfg.vocab, cfg.d_model), dt),
+        "mamba_g": mamba_g,
+        "mamba_t": mamba_t,
+        "shared": shared,
+        "norm_f": jnp.ones((cfg.d_model,), dt),
+    }
+
+
+def _mamba_layer(lp, h, cfg, cache=None, make_cache=False, decode=False):
+    hn = rmsnorm(h, lp["norm"], cfg.norm_eps)
+    if decode:
+        out, c = M.mamba2_decode(lp["ssm"], hn, cfg, cache)
+    else:
+        out, c = M.mamba2_forward(lp["ssm"], hn, cfg, cache=cache,
+                                  return_cache=make_cache)
+    return h + out, c
+
+
+def _shared_block(sp, h, h0, cfg, *, positions=None, cache=None,
+                  decode=False, make_cache=False, cache_len=None):
+    x = jnp.concatenate([h, h0], axis=-1)
+    x = jnp.einsum("bse,ed->bsd", x, sp["in_proj"])
+    xn = rmsnorm(x, sp["norm_attn"], cfg.norm_eps)
+    if decode:
+        attn_out, c = A.attn_decode(sp["attn"], xn, cfg, cache)
+    else:
+        attn_out, c = A.attn_forward(sp["attn"], xn, cfg, positions=positions,
+                                     make_cache=make_cache,
+                                     cache_len=cache_len)
+    x = x + attn_out
+    x = x + swiglu(rmsnorm(x, sp["norm_ffn"], cfg.norm_eps), **sp["mlp"])
+    return h + x, c
+
+
+def forward(p, cfg, batch, *, make_cache=False, cache_len=None,
+            return_hidden=False):
+    tokens = batch["tokens"]
+    h = jnp.take(p["embed"], tokens, axis=0).astype(jnp.dtype(cfg.compute_dtype))
+    h0 = h
+    B, S = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    every, G, tail = _split(cfg)
+
+    def group_body(carry, gp):
+        h = carry
+
+        def inner(h, lp):
+            h, c = _mamba_layer(lp, h, cfg, make_cache=make_cache)
+            return h, c
+
+        inner_fn = jax.checkpoint(inner) if cfg.remat else inner
+        h, m_caches = jax.lax.scan(inner_fn, h, gp)
+        h, a_cache = _shared_block(p["shared"], h, h0, cfg,
+                                   positions=positions,
+                                   make_cache=make_cache, cache_len=cache_len)
+        return h, (m_caches, a_cache)
+
+    h, (mg_caches, ag_caches) = jax.lax.scan(group_body, h, p["mamba_g"])
+
+    def tail_body(h, lp):
+        h, c = _mamba_layer(lp, h, cfg, make_cache=make_cache)
+        return h, c
+
+    if tail:
+        h, mt_caches = jax.lax.scan(tail_body, h, p["mamba_t"])
+    else:
+        mt_caches = None
+    h = rmsnorm(h, p["norm_f"], cfg.norm_eps)
+    caches = HybridCache(mg_caches, ag_caches, mt_caches) if make_cache else None
+    if return_hidden:
+        return h, caches, jnp.zeros((), jnp.float32)
+    logits = jnp.einsum("bsd,vd->bsv", h, p["embed"])
+    return logits, caches, jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg, batch_size: int, max_len: int, window=None):
+    every, G, tail = _split(cfg)
+    m1 = M.mamba2_init_cache(cfg, batch_size)
+    a1 = A.init_cache(cfg, batch_size, max_len, window=window)
+
+    def stack(tree, *dims):
+        def f(x):
+            for d in reversed(dims):
+                x = jnp.broadcast_to(x[None], (d,) + x.shape)
+            return x
+        return jax.tree.map(f, tree)
+
+    return HybridCache(
+        mamba_g=stack(m1, G, every),
+        attn_g=stack(a1, G),
+        mamba_t=stack(m1, tail) if tail else None,
+    )
+
+
+def decode_step(p, cfg, caches: HybridCache, token):
+    h = jnp.take(p["embed"], token[:, None], axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+    h0 = h
+    every, G, tail = _split(cfg)
+
+    def group_body(h, xs):
+        gp, m_caches, a_cache = xs
+
+        def inner(h, lp_c):
+            lp, c = lp_c
+            h, c = _mamba_layer(lp, h, cfg, cache=c, decode=True)
+            return h, c
+
+        h, m_new = jax.lax.scan(inner, h, (gp, m_caches))
+        h, a_new = _shared_block(p["shared"], h, h0, cfg, cache=a_cache,
+                                 decode=True)
+        return h, (m_new, a_new)
+
+    h, (mg_new, ag_new) = jax.lax.scan(
+        group_body, h, (p["mamba_g"], caches.mamba_g, caches.attn_g))
+
+    if tail:
+        def tail_body(h, lp_c):
+            lp, c = lp_c
+            h, c = _mamba_layer(lp, h, cfg, cache=c, decode=True)
+            return h, c
+
+        h, mt_new = jax.lax.scan(tail_body, h, (p["mamba_t"], caches.mamba_t))
+    else:
+        mt_new = None
+    h = rmsnorm(h, p["norm_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", h, p["embed"])[:, 0]
+    return logits, HybridCache(mg_new, ag_new, mt_new)

@@ -1,0 +1,71 @@
+"""Shared building blocks: norms, embeddings, RoPE, init helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(max(fan_in, 1), jnp.float32))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def rmsnorm(x, scale, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary embedding. x: [..., S, H, dh]; positions: [..., S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]  # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int, dtype=jnp.float32):
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((n, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div[: (d + 1) // 2]))
+    return pe.astype(dtype)
+
+
+def _dot(x, w):
+    """x @ w with optional in-backward robust weight-grad reduce (IB-RRS,
+    DESIGN.md §2) when repro.dist.robust_reduce.robust_backward is active."""
+    from ..dist import robust_reduce as RR
+
+    if RR.robust_dot_enabled() and x.ndim == 3 and w.ndim == 2:
+        return RR.robust_dot(x, w)
+    return jnp.einsum("...d,df->...f", x, w)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU MLP: (silu(x@wg) * (x@wu)) @ wd."""
+    g = jax.nn.silu(_dot(x, w_gate))
+    u = _dot(x, w_up)
+    return _dot(g * u, w_down)
+
+
+def mlp_init(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), dtype),
+    }

@@ -1,0 +1,243 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD algorithm for train/prefill (within-chunk quadratic term +
+inter-chunk recurrence over chunk states via lax.scan), exact one-step
+recurrence for decode. Matches the naive recurrence oracle (tested in
+tests/test_models.py::test_ssd_matches_naive_recurrence).
+
+State per head: h in R^{P x N} (P = head_dim, N = d_state):
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t (x) x_t
+    y_t = C_t . h_t + D_skip * x_t
+A is a per-head negative scalar (Mamba2 simplification).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rmsnorm
+
+
+class SSMCache(NamedTuple):
+    h: jnp.ndarray        # [B, H, P, N]
+    conv: jnp.ndarray     # [B, d_conv-1, d_inner]   (x stream)
+    conv_bc: jnp.ndarray  # [B, d_conv-1, 2*G*N]     (B/C streams)
+    pos: jnp.ndarray
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    return d_inner, H, s.head_dim, s.d_state, s.n_groups
+
+
+def mamba2_init(key, cfg):
+    """Projections are SPLIT per stream (z / x / BC / dt) rather than one
+    fused in_proj: slicing a model-sharded fused output forces per-layer
+    all-gathers under GSPMD (EXPERIMENTS.md §Perf, zamba2 hillclimb).
+    The depthwise conv splits exactly the same way (channel-separable)."""
+    s = cfg.ssm
+    d_inner, H, P, N, G = _dims(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj_z": dense_init(ks[0], (cfg.d_model, d_inner), dt),
+        "in_proj_x": dense_init(ks[1], (cfg.d_model, d_inner), dt),
+        "in_proj_bc": dense_init(ks[2], (cfg.d_model, 2 * G * N), dt),
+        "in_proj_dt": dense_init(ks[3], (cfg.d_model, H), dt),
+        "conv_x": dense_init(ks[4], (s.d_conv, d_inner), dt, fan_in=s.d_conv),
+        "conv_bc": dense_init(ks[5], (s.d_conv, 2 * G * N), dt,
+                              fan_in=s.d_conv),
+        "A_log": jnp.zeros((H,), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.ones((d_inner,), dt),
+        "out_proj": dense_init(ks[6], (d_inner, cfg.d_model), dt),
+    }
+
+
+def _project(p, x, cfg):
+    """x: [B,S,D] -> (z, xs, BC, dt) via the per-stream projections."""
+    z = jnp.einsum("bsd,de->bse", x, p["in_proj_z"])
+    xs = jnp.einsum("bsd,de->bse", x, p["in_proj_x"])
+    bc = jnp.einsum("bsd,de->bse", x, p["in_proj_bc"])
+    dtp = jnp.einsum("bsd,de->bse", x, p["in_proj_dt"])
+    return z, xs, bc, dtp
+
+
+def _conv(xBC, w, state=None):
+    """Causal depthwise conv over seq. xBC: [B, S, Cd], w: [K, Cd].
+
+    ``state``: optional [B, K-1, Cd] of previous inputs (prefill=zeros).
+    Returns (y [B, S, Cd], new_state [B, K-1, Cd])."""
+    K = w.shape[0]
+    xpad = jnp.concatenate(
+        [jnp.zeros((xBC.shape[0], K - 1, xBC.shape[2]), xBC.dtype)
+         if state is None else state.astype(xBC.dtype), xBC], axis=1)
+    y = sum(xpad[:, i : i + xBC.shape[1]] * w[i][None, None] for i in range(K))
+    new_state = xpad[:, xBC.shape[1]:]
+    return jax.nn.silu(y), new_state
+
+
+def _segsum(a):
+    """a: [..., L] log-decays -> [..., L, L] cumulative sums over (s, t]:
+    out[t, s] = sum_{r=s+1..t} a_r for s < t, 0 on diag, -inf above."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # [t, s] = cs_t - cs_s
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x: [b, S, H, P]; dt: [b, S, H] (>=0); A: [H] (<0);
+    B, C: [b, S, G, N] (G divides H). Returns (y [b,S,H,P], h_T [b,H,P,N]).
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2)  # [b, S, H, N]
+    Ch = jnp.repeat(C, rep, axis=2)
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bh = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Ch = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+
+    def r(t):  # [b, Sp, ...] -> [nc, b, chunk, ...]
+        return jnp.moveaxis(t.reshape(b, nc, chunk, *t.shape[2:]), 1, 0)
+
+    xc, dtc, Bc, Cc = r(x), r(dt), r(Bh), r(Ch)
+    a = (dtc.astype(jnp.float32) * A[None, None, None]).astype(jnp.float32)
+    # within-chunk log-decay matrix per head: [nc, b, H, L, L]
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(a, -1, -2)))  # a -> [nc,b,H,L]
+    # intra-chunk (diagonal block) output:
+    # y[t] += sum_s C_t.B_s dt_s decay(t,s) x_s
+    CB = jnp.einsum("cbthn,cbshn->cbhts", Cc, Bc)
+    W = CB * Lmat * jnp.moveaxis(dtc, -1, -2)[..., None, :]  # [nc,b,h,t,s]
+    y_diag = jnp.einsum("cbhts,cbshp->cbthp", W.astype(x.dtype), xc)
+    # chunk states: states_c = sum_s decay(end, s) dt_s B_s (x) x_s
+    a_h = jnp.moveaxis(a, -1, -2)  # [nc, b, H, L]
+    cum = jnp.cumsum(a_h, axis=-1)
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)  # [nc,b,H,L]
+    sw = (decay_to_end * jnp.moveaxis(dtc, -1, -2)).astype(x.dtype)
+    states = jnp.einsum("cbhs,cbshn,cbshp->cbhpn", sw, Bc, xc)
+    chunk_decay = jnp.exp(cum[..., -1])  # [nc, b, H]
+
+    if h0 is None:
+        h0 = jnp.zeros((b, H, P, N), jnp.float32)
+
+    def scan_body(h, inp):
+        st, cd = inp  # [b,H,P,N], [b,H]
+        h_prev = h
+        h = h * cd[..., None, None] + st.astype(jnp.float32)
+        return h, h_prev
+
+    hT, h_prevs = jax.lax.scan(scan_body, h0.astype(jnp.float32),
+                               (states, chunk_decay))
+    # inter-chunk output: y[t] += C_t . (decay(t, start) h_prev)
+    decay_from_start = jnp.exp(cum).astype(x.dtype)  # [nc,b,H,L]
+    y_off = jnp.einsum("cbthn,cbhpn,cbht->cbthp", Cc,
+                       h_prevs.astype(x.dtype), decay_from_start)
+    y = y_diag + y_off
+    y = jnp.moveaxis(y, 0, 1).reshape(b, Sp, H, P)[:, :S]
+    return y, hT
+
+
+def ssd_decode_step(x1, dt1, A, B1, C1, h):
+    """One-step recurrence. x1: [b,H,P], dt1: [b,H], B1/C1: [b,G,N],
+    h: [b,H,P,N] (f32). Returns (y [b,H,P], h_new)."""
+    H = x1.shape[1]
+    G = B1.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(B1, rep, axis=1)  # [b,H,N]
+    Ch = jnp.repeat(C1, rep, axis=1)
+    decay = jnp.exp(dt1.astype(jnp.float32) * A[None])  # [b,H]
+    upd = (dt1[..., None, None].astype(jnp.float32)
+           * Bh[:, :, None, :].astype(jnp.float32)
+           * x1[..., None].astype(jnp.float32))
+    h_new = h * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", h_new.astype(x1.dtype), Ch)
+    return y, h_new
+
+
+def mamba2_forward(p, x, cfg, cache: SSMCache | None = None,
+                   return_cache: bool = False):
+    """Full-sequence mamba2 block. x: [B, S, D] -> [B, S, D]."""
+    s = cfg.ssm
+    d_inner, H, P, N, G = _dims(cfg)
+    z, xs, bc, dtp = _project(p, x, cfg)
+    conv_state = cache.conv if cache is not None else None
+    conv_bc_state = cache.conv_bc if cache is not None else None
+    xs, conv_state = _conv(xs, p["conv_x"], conv_state)
+    bc, conv_bc_state = _conv(bc, p["conv_bc"], conv_bc_state)
+    B_, C_ = jnp.split(bc, [G * N], axis=-1)
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+    b, S = x.shape[0], x.shape[1]
+    xh = xs.reshape(b, S, H, P)
+    Bm = B_.reshape(b, S, G, N)
+    Cm = C_.reshape(b, S, G, N)
+    h0 = cache.h if cache is not None else None
+    y, hT = ssd_chunked(xh, dt, A, Bm, Cm, chunk=s.chunk, h0=h0)
+    y = y + p["D"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(b, S, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    new_cache = None
+    if return_cache:
+        pos = (cache.pos if cache is not None else 0) + S
+        new_cache = SSMCache(h=hT, conv=conv_state, conv_bc=conv_bc_state,
+                             pos=jnp.asarray(pos, jnp.int32))
+    return out, new_cache
+
+
+def mamba2_init_cache(cfg, batch: int):
+    s = cfg.ssm
+    d_inner, H, P, N, G = _dims(cfg)
+    dt = jnp.dtype(cfg.compute_dtype)
+    return SSMCache(
+        h=jnp.zeros((batch, H, P, N), jnp.float32),
+        conv=jnp.zeros((batch, s.d_conv - 1, d_inner), dt),
+        conv_bc=jnp.zeros((batch, s.d_conv - 1, 2 * G * N), dt),
+        pos=jnp.asarray(0, jnp.int32),
+    )
+
+
+def _conv_step(state, x1, w):
+    """One causal depthwise-conv step. state: [B,K-1,C], x1: [B,1,C]."""
+    conv_in = jnp.concatenate([state.astype(x1.dtype), x1], axis=1)
+    y = sum(conv_in[:, i : i + 1] * w[i][None, None]
+            for i in range(w.shape[0]))
+    return jax.nn.silu(y)[:, 0], conv_in[:, 1:]
+
+
+def mamba2_decode(p, x1, cfg, cache: SSMCache):
+    """One-token decode. x1: [B, 1, D]. Returns (out [B,1,D], cache)."""
+    s = cfg.ssm
+    d_inner, H, P, N, G = _dims(cfg)
+    z, xs, bc, dtp = _project(p, x1, cfg)
+    xs1, new_conv = _conv_step(cache.conv, xs, p["conv_x"])
+    bc1, new_conv_bc = _conv_step(cache.conv_bc, bc, p["conv_bc"])
+    B1, C1 = jnp.split(bc1, [G * N], axis=-1)
+    dt1 = jax.nn.softplus(dtp[:, 0].astype(jnp.float32) + p["dt_bias"][None])
+    A = -jnp.exp(p["A_log"])
+    b = x1.shape[0]
+    y, h_new = ssd_decode_step(
+        xs1.reshape(b, H, P), dt1, A, B1.reshape(b, G, N), C1.reshape(b, G, N),
+        cache.h,
+    )
+    y = y + p["D"][None, :, None].astype(y.dtype) * xs1.reshape(b, H, P)
+    y = y.reshape(b, 1, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, SSMCache(h=h_new, conv=new_conv, conv_bc=new_conv_bc,
+                         pos=cache.pos + 1)

@@ -1,0 +1,109 @@
+"""Top-k capacity-routed Mixture-of-Experts (GShard-style, scatter form).
+
+TPU adaptation: routing is *grouped* — tokens are routed within their
+batch row, so capacity bookkeeping stays local to the data shard and no
+global cumsum crosses the data axis (DESIGN.md §4). Dispatch/combine use
+scatter/gather instead of the [T, E, C] one-hot einsum, which would be
+~10^10 elements at train_4k scale.
+
+Expert FFNs are SwiGLU with weights stacked [E, ...]; the hidden dim is
+the TP-sharded axis (experts stay resident — "tensor-parallel experts" —
+because 40 and 8 experts don't divide the 16-way model axis).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+def moe_init(key, cfg):
+    m = cfg.moe
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    E, D, F = m.n_experts, cfg.d_model, cfg.d_ff
+    return {
+        "router": dense_init(ks[0], (D, E), dt),
+        "w_gate": dense_init(ks[1], (E, D, F), dt, fan_in=D),
+        "w_up": dense_init(ks[2], (E, D, F), dt, fan_in=D),
+        "w_down": dense_init(ks[3], (E, F, D), dt, fan_in=F),
+    }
+
+
+def _route_group(x, p, cfg):
+    """x: [T, D] one group. Returns (y [T, D], aux_loss scalar)."""
+    m = cfg.moe
+    T, D = x.shape
+    E, k = m.n_experts, m.top_k
+    C = max(int(m.capacity_factor * k * T / E), 1)
+
+    logits = jnp.einsum("td,de->te", x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # [T, k]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Position-in-expert per (token, slot), sequential over slots;
+    # dispatch/combine as GShard one-hot einsums (scatter/gather defeats
+    # GSPMD sharding propagation — it replicated the group dim and
+    # partial-summed the FSDP dim; see EXPERIMENTS.md §Perf).
+    counts = jnp.zeros((E,), jnp.int32)
+    dispatch = jnp.zeros((T, E, C), x.dtype)
+    combine = jnp.zeros((T, E, C), x.dtype)
+    for slot in range(k):
+        e = expert_idx[:, slot]  # [T]
+        onehot = jax.nn.one_hot(e, E, dtype=jnp.int32)  # [T, E]
+        pos = jnp.cumsum(onehot, axis=0) - 1
+        pos = jnp.take_along_axis(pos, e[:, None], axis=1)[:, 0] + counts[e]
+        keep = pos < C
+        pos_c = jnp.where(keep, pos, C - 1)
+        oh_pos = (jax.nn.one_hot(pos_c, C, dtype=x.dtype)
+                  * keep[:, None].astype(x.dtype))  # [T, C]
+        slot_disp = onehot.astype(x.dtype)[:, :, None] * oh_pos[:, None, :]
+        dispatch = dispatch + slot_disp
+        combine = combine + slot_disp * gate_vals[:, slot, None, None
+                                                  ].astype(x.dtype)
+        counts = counts + jnp.sum(onehot, axis=0)
+
+    from ..dist import ctx as CTX
+
+    xin = jnp.einsum("tec,td->ecd", dispatch, x)
+    # Expert FFNs: [E, C, D] -> [E, C, D]. Constrain the hidden dim to
+    # 'model' (Megatron column-parallel): without it GSPMD contracts the
+    # FSDP-sharded D and all-reduces a FULL-d_ff f32 partial instead
+    # (9.4 GB/buffer on mixtral prefill — EXPERIMENTS.md §Perf).
+    g = CTX.constrain(jnp.einsum("ecd,edf->ecf", xin, p["w_gate"]),
+                      None, None, "model")
+    u = CTX.constrain(jnp.einsum("ecd,edf->ecf", xin, p["w_up"]),
+                      None, None, "model")
+    xout = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["w_down"])
+    y = jnp.einsum("tec,ecd->td", combine, xout)
+
+    # Load-balance auxiliary loss (Switch-style): E * sum_e f_e * P_e.
+    frac = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32), 0)
+    imp = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac * imp)
+    return y, aux
+
+
+MOE_SEQ_CHUNK = 2048
+
+
+def moe_ffn(p, x, cfg):
+    """x: [B, S, D] -> (y [B, S, D], aux scalar).
+
+    Groups = batch rows, additionally chunked along seq at 4096 tokens:
+    capacity bookkeeping stays per-chunk, which bounds the [E, C, D]
+    dispatch buffers for 32k+ prefill (mixtral prefill_32k would
+    otherwise build 671 MB/expert-group buffers) and improves balance.
+    """
+    B, S, D = x.shape
+    c = min(MOE_SEQ_CHUNK, S)
+    if S % c:
+        c = S  # fall back to one group per row for odd smoke shapes
+    # Keep (batch, chunk) as TWO vmapped dims: batch may be data-sharded
+    # and the chunk dim model-sharded (Megatron-SP seq sharding);
+    # collapsing them into one group dim forces GSPMD to replicate.
+    xg = x.reshape(B, S // c, c, D)
+    y, aux = jax.vmap(jax.vmap(lambda xb: _route_group(xb, p, cfg)))(xg)
+    return y.reshape(B, S, D), jnp.mean(aux)

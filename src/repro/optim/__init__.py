@@ -1,0 +1,154 @@
+"""Pure-JAX optimizers: SGD(+momentum), AdamW, Adafactor.
+
+Optimizer states mirror the params tree (dict of trees) so sharding
+specs derive mechanically from the param specs
+(``repro.dist.sharding.opt_state_specs``). Adafactor exists because f32
+Adam moments for llama3-405b exceed v5e HBM (DESIGN.md §5): factored
+second moment + bf16 momentum.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Any   # params -> state
+    update: Any  # (grads, state, params) -> (new_params, new_state)
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def sgd(lr: float = 1e-2, momentum: float = 0.0):
+    def init(params):
+        if momentum == 0.0:
+            return {"step": jnp.zeros((), jnp.int32)}
+        return {"m": _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        if momentum == 0.0:
+            new_p = _tmap(lambda p, g: (p.astype(jnp.float32)
+                                        - lr * g.astype(jnp.float32)
+                                        ).astype(p.dtype), params, grads)
+            return new_p, {"step": state["step"] + 1}
+        m = _tmap(lambda m, g: momentum * m + g.astype(jnp.float32),
+                  state["m"], grads)
+        new_p = _tmap(lambda p, mm: (p.astype(jnp.float32) - lr * mm
+                                     ).astype(p.dtype), params, m)
+        return new_p, {"m": m, "step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0):
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": _tmap(z, params), "v": _tmap(z, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree.flatten(params)
+        outs = [upd(p, g, m, v) for p, g, m, v in zip(
+            flat_p, jax.tree.leaves(grads),
+            treedef.flatten_up_to(state["m"]),
+            treedef.flatten_up_to(state["v"]))]
+        new_p = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        m = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        v = jax.tree.unflatten(treedef, [o[2] for o in outs])
+        return new_p, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: float = 1e-3, eps: float = 1e-30, momentum: float = 0.9,
+              momentum_dtype=jnp.bfloat16, clip_rms: float = 1.0,
+              decay: float = 0.8):
+    """Factored second moment (Shazeer & Stern 2018), bf16 first moment."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def vstate(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+
+        st = {"v": jax.tree.map(vstate, params),
+              "step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            st["m"] = _tmap(lambda p: jnp.zeros_like(p, momentum_dtype), params)
+        return st
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta2 = 1.0 - t ** (-decay)
+
+        def upd(p, g, vs, m):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta2 * vs["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * vs["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                vhat = vr[..., None] * vc[..., None, :] / denom[..., None]
+                new_vs = {"vr": vr, "vc": vc}
+            else:
+                vhat = beta2 * vs["v"] + (1 - beta2) * g2
+                new_vs = {"v": vhat}
+            u = g / jnp.sqrt(vhat + eps)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_rms)
+            if m is not None:
+                mf = momentum * m.astype(jnp.float32) + (1 - momentum) * u
+                u = mf
+                new_m = mf.astype(momentum_dtype)
+            else:
+                new_m = None
+            new_p = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            return new_p, new_vs, new_m
+
+        is_v = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_m = (treedef.flatten_up_to(state["m"]) if momentum
+                  else [None] * len(flat_p))
+        outs = [upd(p, g, v, m) for p, g, v, m in
+                zip(flat_p, flat_g, flat_v, flat_m)]
+        new_p = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        new_v = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        st = {"v": new_v, "step": step}
+        if momentum:
+            st["m"] = jax.tree.unflatten(treedef, [o[2] for o in outs])
+        return new_p, st
+
+    return Optimizer(init, update)
+
+
+def get(name: str, **kwargs) -> Optimizer:
+    return {"sgd": sgd, "adamw": adamw, "adafactor": adafactor}[name](**kwargs)

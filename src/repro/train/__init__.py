@@ -1,0 +1,2 @@
+from . import step
+from .step import make_serve_steps, make_train_step

@@ -1,0 +1,243 @@
+"""Step builders: Byzantine-robust train_step + prefill/decode serve steps.
+
+``make_train_step`` wires the paper's technique into the training loop:
+per-worker gradients (vmap over the worker axis = data mesh axes),
+optional simulated Byzantine corruption, robust aggregation
+(repro.dist.robust_reduce), optimizer update. Everything jit-compatible
+and fully sharded; the returned callable carries .in_shardings /
+.out_shardings for jit/lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..core import attacks as atk
+from ..dist import ctx as CTX
+from ..dist import robust_reduce as RR
+from ..dist import sharding as S
+from ..models import model as M
+from .. import optim as O
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSetup:
+    step_fn: Callable
+    params_specs: object
+    opt_specs: object
+    batch_axes: tuple
+    worker_axes: tuple
+    n_workers: int
+
+
+
+
+def opt_state_specs(opt_state_shapes, params, params_specs):
+    """Specs for optimizer state mirroring the params tree.
+
+    Handles: 'm'/'v' trees shaped like params; adafactor's nested
+    {'vr','vc'} / {'v'} dicts (vr = spec[:-1], vc = spec minus dim -2).
+    """
+    flat_params, ptree = jax.tree.flatten(params)
+    flat_specs = ptree.flatten_up_to(params_specs)
+    shape2spec = {}
+    for p, s in zip(flat_params, flat_specs):
+        shape2spec.setdefault(tuple(p.shape), s)
+
+    def leaf_spec(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "name", ""))) for k in path]
+        shp = tuple(leaf.shape)
+        if shp in shape2spec:
+            return shape2spec[shp]
+        name = names[-1] if names else ""
+        # factored adafactor leaves: find the parent param by prefix match
+        if name in ("vr", "vc"):
+            for pshape, s in shape2spec.items():
+                entries = list(s) + [None] * (len(pshape) - len(s))
+                if name == "vr" and pshape[:-1] == shp:
+                    return P(*entries[:-1])
+                if name == "vc" and pshape[:-2] + pshape[-1:] == shp:
+                    return P(*entries[:-2], entries[-1])
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, opt_state_shapes)
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    mesh,
+    *,
+    aggregator: str = "vrmom",
+    mode: str = "stacked-rrs",  # stacked-rrs | stacked-auto | mean | inloop
+    K: int = 10,
+    optimizer=None,
+    lr: float = 1e-3,
+    byzantine_frac: float = 0.0,
+    attack: str = "gaussian",
+    global_batch: Optional[int] = None,
+    use_pallas: bool = False,
+    microbatch: Optional[int] = None,
+) -> TrainSetup:
+    """``microbatch``: gradient-accumulation steps per worker (None = auto:
+    one-sequence microbatches when seq_len >= 2048 — keeps remat-stored
+    layer boundaries at one sequence/chip, see EXPERIMENTS.md §Perf)."""
+    worker_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_workers = 1
+    for a in worker_axes:
+        n_workers *= mesh.shape[a]
+    batch_axes = worker_axes
+    optimizer = optimizer or O.get(cfg.optimizer, lr=lr)
+
+    params_shapes = M.abstract_init(cfg)
+    params_specs = S.param_specs(params_shapes, mesh)
+    opt_shapes = jax.eval_shape(optimizer.init, params_shapes)
+    opt_specs = opt_state_specs(opt_shapes, params_shapes, params_specs)
+
+    n_byz = int(byzantine_frac * (n_workers - 1))
+    mask = jnp.arange(n_workers) >= (n_workers - n_byz)
+    attack_fn = atk.get(attack)
+
+    def loss_fn(p, b):
+        return M.loss(p, cfg, b)
+
+    def _micro_for(batch_w):
+        if microbatch is not None:
+            return microbatch
+        tokens = batch_w["tokens"]
+        per_worker, seq = tokens.shape[1], tokens.shape[2]
+        return per_worker if seq >= 2048 else 1
+
+    def worker_grad(params, b):
+        """Per-worker loss+grad with gradient accumulation over
+        1/micro-sized slices of the worker's batch (f32 accumulator)."""
+        micro = _micro_for_static[0]
+        if micro <= 1:
+            return jax.value_and_grad(loss_fn)(params, b)
+        bm = jax.tree.map(
+            lambda x: x.reshape((micro, x.shape[0] // micro) + x.shape[1:]),
+            b)
+        acc0 = (jnp.zeros(()),
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params))
+
+        def mb(acc, bi):
+            l, g = jax.value_and_grad(loss_fn)(params, bi)
+            return (acc[0] + l,
+                    jax.tree.map(lambda a, gg: a + gg.astype(jnp.float32),
+                                 acc[1], g)), None
+
+        (l, g), _ = jax.lax.scan(mb, acc0, bm)
+        g = jax.tree.map(lambda x, p: (x / micro).astype(p.dtype), g, params)
+        return l / micro, g
+
+    _micro_for_static = [1]
+
+    def train_step(params, opt_state, batch, key):
+      with CTX.mesh_context(mesh):
+          if mode == "inloop":
+              # IB-RRS: global backward; heavy matmul grads are robust-
+              # reduced inside the bwd pass via robust_dot. Gradient
+              # accumulation over batch slices bounds activation memory
+              # (the aggregate of per-micro VRMOMs stays robust: each
+              # micro-step aggregation already bounds Byzantine influence).
+              B = batch["tokens"].shape[0]
+              seq = batch["tokens"].shape[1]
+              micro = microbatch if microbatch is not None else (
+                  max(B // n_workers, 1) if seq >= 2048 else 1)
+              with RR.robust_backward(mesh, worker_axes, method=aggregator, K=K):
+                  if micro > 1:
+                      bm = jax.tree.map(
+                          lambda x: x.reshape((micro, x.shape[0] // micro)
+                                              + x.shape[1:]), batch)
+                      acc0 = (jnp.zeros(()),
+                              jax.tree.map(lambda p: jnp.zeros(
+                                  p.shape, jnp.float32), params))
+
+                      def mb(acc, bi):
+                          l, g = jax.value_and_grad(loss_fn)(params, bi)
+                          g = jax.lax.with_sharding_constraint(
+                              g, S.to_named(mesh, params_specs))
+                          return (acc[0] + l, jax.tree.map(
+                              lambda a, gg: a + gg.astype(jnp.float32),
+                              acc[1], g)), None
+
+                      (loss, grads), _ = jax.lax.scan(mb, acc0, bm)
+                      loss = loss / micro
+                      grads = jax.tree.map(
+                          lambda x, p: (x / micro).astype(p.dtype),
+                          grads, params)
+                  else:
+                      loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+              agg = grads
+          else:
+              # split the global batch into per-worker microbatches
+              def split(x):
+                  b = x.shape[0]
+                  return x.reshape((n_workers, b // n_workers) + x.shape[1:])
+
+              batch_w = jax.tree.map(split, batch)
+              _micro_for_static[0] = _micro_for(batch_w)
+              # spmd_axis_name pins every batched intermediate's worker
+              # dim to the data axes — without it XLA materializes
+              # worker-replicated activations in the backward pass.
+              losses, grads = jax.vmap(
+                  worker_grad, in_axes=(None, 0),
+                  spmd_axis_name=worker_axes,
+              )(params, batch_w)
+              loss = jnp.mean(losses)
+              stacked_specs = S.stacked_grad_specs(
+                  params_specs, worker_axes, mesh, shapes=params_shapes)
+              grads = jax.lax.with_sharding_constraint(
+                  grads, S.to_named(mesh, stacked_specs))
+              if n_byz:
+                  grads = jax.tree.map(
+                      lambda g: attack_fn(key, g, mask), grads)
+              agg = RR.aggregate(grads, mesh, worker_axes, mode=mode,
+                                 method=aggregator, K=K, use_pallas=use_pallas)
+          agg = jax.lax.with_sharding_constraint(
+              agg, S.to_named(mesh, params_specs))
+          new_params, new_opt = optimizer.update(agg, opt_state, params)
+          new_params = jax.lax.with_sharding_constraint(
+              new_params, S.to_named(mesh, params_specs))
+          return new_params, new_opt, loss
+
+    return TrainSetup(
+        step_fn=train_step,
+        params_specs=params_specs,
+        opt_specs=opt_specs,
+        batch_axes=batch_axes,
+        worker_axes=worker_axes,
+        n_workers=n_workers,
+    )
+
+
+def make_serve_steps(cfg: ArchConfig, mesh, *, shape, window="cfg"):
+    """Returns (prefill_fn, decode_fn, cache_spec_fn) with spec helpers."""
+    batch_axes = S.batch_axes_for(mesh, shape.global_batch)
+
+    def prefill_fn(params, batch):
+        with CTX.mesh_context(mesh):
+            logits, caches = M.prefill(params, cfg, batch, window=window,
+                                       cache_len=shape.seq_len,
+                                       last_only=True)
+            return logits, caches
+
+    def decode_fn(params, caches, token):
+        with CTX.mesh_context(mesh):
+            return M.decode_step(params, cfg, caches, token, window=window)
+
+    def cache_shapes():
+        return jax.eval_shape(
+            lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                 window=window))
+
+    def specs():
+        cs = S.cache_specs(cfg, cache_shapes(), mesh, batch_axes)
+        return cs
+
+    return prefill_fn, decode_fn, cache_shapes, specs, batch_axes

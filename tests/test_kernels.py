@@ -1,0 +1,129 @@
+"""Per-kernel allclose tests: Pallas (interpret on CPU) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import vrmom as V
+from repro.kernels import ops, ref
+from repro.kernels.vrmom import mom_pallas, vrmom_pallas
+
+
+def _rand(key, m, c, dtype):
+    x = 4.0 * jax.random.normal(key, (m, c), jnp.float32) + 1.5
+    return x.astype(dtype)
+
+
+SHAPES = [(3, 7), (8, 64), (16, 512), (17, 513), (32, 1000), (33, 2048),
+          (2, 5), (101, 300)]
+
+
+@pytest.mark.parametrize("m,c", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mom_kernel_matches_ref(m, c, dtype):
+    x = _rand(jax.random.PRNGKey(m * 1000 + c), m, c, dtype)
+    got = mom_pallas(x, interpret=True)
+    want = ref.ref_mom(x)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("m,c", SHAPES)
+@pytest.mark.parametrize("K", [1, 5, 10, 16])
+def test_vrmom_kernel_matches_ref(m, c, K):
+    x = _rand(jax.random.PRNGKey(m + c + K), m, c, jnp.float32)
+    got = vrmom_pallas(x, K=K, interpret=True)
+    want = ref.ref_vrmom(x, K=K)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_vrmom_kernel_dtypes(dtype):
+    x = _rand(jax.random.PRNGKey(0), 16, 777, dtype)
+    got = vrmom_pallas(x, K=10, interpret=True)
+    want = ref.ref_vrmom(x, K=10)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+    assert got.dtype == dtype
+
+
+def test_ref_matches_core_estimator():
+    """The kernel oracle must equal the statistical reference (core.vrmom)."""
+    x = _rand(jax.random.PRNGKey(3), 21, 40, jnp.float32)
+    a = ref.ref_vrmom(x, K=10)
+    b = V.vrmom(x, K=10, scale="mad")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_nd_input():
+    x = _rand(jax.random.PRNGKey(4), 16, 6 * 9, jnp.float32).reshape(16, 6, 9)
+    got = ops.robust_aggregate(x, "vrmom", interpret=True)
+    want = ref.ref_vrmom(x.reshape(16, -1)).reshape(6, 9)
+    assert got.shape == (6, 9)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_kernel_byzantine_bounded():
+    key = jax.random.PRNGKey(5)
+    x = _rand(key, 32, 128, jnp.float32)
+    y = x.at[-10:].set(1e9)  # 10/32 Byzantine rows
+    got = vrmom_pallas(y, K=10, interpret=True)
+    med = ref.ref_mom(x[:-10])
+    assert float(jnp.max(jnp.abs(got - med))) < 50.0
+
+
+# ---------------------------------------------------------------- flash attn
+
+from repro.kernels.flash_attention import flash_attention
+
+
+@pytest.mark.parametrize("S,H,Hkv,dh,blk", [
+    (64, 2, 2, 32, 16), (96, 4, 2, 64, 32), (128, 2, 1, 64, 64),
+    (80, 2, 2, 32, 32),  # non-divisible seq
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(S, H, Hkv, dh, blk, causal):
+    key = jax.random.PRNGKey(S + H)
+    B = 2
+    q = jax.random.normal(key, (B, S, H, dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, Hkv, dh))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, Hkv, dh))
+    got = flash_attention(q, k, v, causal=causal, blk_q=blk, blk_k=blk,
+                          interpret=True)
+    kk = jnp.repeat(k, H // Hkv, axis=2)
+    vv = jnp.repeat(v, H // Hkv, axis=2)
+    want = ref.ref_attention(q, kk, vv, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_flash_attention_bf16():
+    key = jax.random.PRNGKey(9)
+    q = jax.random.normal(key, (1, 64, 2, 64), jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 64, 2, 64), jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, blk_q=32, blk_k=32,
+                          interpret=True)
+    want = ref.ref_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+    assert got.dtype == jnp.bfloat16
+
+
+def test_flash_attention_matches_model_mha():
+    """Flash kernel == the model's chunked mha (same math)."""
+    from repro.models.attention import mha
+    key = jax.random.PRNGKey(4)
+    B, S, H, dh = 2, 64, 4, 32
+    q = jax.random.normal(key, (B, S, H, dh))
+    k = jax.random.normal(jax.random.PRNGKey(5), (B, S, 2, dh))
+    v = jax.random.normal(jax.random.PRNGKey(6), (B, S, 2, dh))
+    a = flash_attention(q, k, v, causal=True, blk_q=16, blk_k=16,
+                        interpret=True)
+    b = mha(q, k, v, causal=True, window=None, chunk=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)

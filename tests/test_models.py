@@ -1,0 +1,192 @@
+"""Model-zoo correctness: SSD oracle, prefill/decode consistency, MoE mass."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get as get_arch
+from repro.models import mamba2 as M
+from repro.models import model as Mo
+
+
+def test_ssd_matches_naive_recurrence():
+    """Chunked SSD == naive per-step recurrence (the defining property)."""
+    key = jax.random.PRNGKey(0)
+    b, S, H, P, G, N = 2, 37, 4, 8, 2, 16
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, S, G, N)) * 0.5
+    C = jax.random.normal(ks[4], (b, S, G, N)) * 0.5
+
+    y_chunk, hT = M.ssd_chunked(x, dt, A, B, C, chunk=8)
+
+    # naive recurrence
+    h = jnp.zeros((b, H, P, N))
+    ys = []
+    for t in range(S):
+        y_t, h = M.ssd_decode_step(x[:, t], dt[:, t], A, B[:, t], C[:, t], h)
+        ys.append(y_t)
+    y_naive = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_naive),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(h),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunk_invariance():
+    key = jax.random.PRNGKey(1)
+    b, S, H, P, G, N = 1, 48, 2, 4, 1, 8
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, S, G, N)) * 0.5
+    C = jax.random.normal(ks[4], (b, S, G, N)) * 0.5
+    y1, h1 = M.ssd_chunked(x, dt, A, B, C, chunk=6)
+    y2, h2 = M.ssd_chunked(x, dt, A, B, C, chunk=48)
+    y3, h3 = M.ssd_chunked(x, dt, A, B, C, chunk=7)  # non-divisible
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y3), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h3), rtol=1e-4, atol=1e-4)
+
+
+ARCH_IDS = ["whisper-medium", "qwen3-1.7b", "starcoder2-7b",
+            "phi-3-vision-4.2b", "zamba2-7b", "granite-moe-3b-a800m",
+            "minitron-4b", "mamba2-2.7b", "mixtral-8x7b", "llama3-405b"]
+
+
+def _smoke_batch(cfg, key, B=2, S=32):
+    ks = jax.random.split(key, 2)
+    batch = {}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            ks[0], (B, cfg.encoder.n_frames, cfg.d_model), jnp.float32)
+        batch["tokens"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab)
+    elif cfg.family == "vlm":
+        n = cfg.vision.n_patches
+        batch["patches"] = jax.random.normal(ks[0], (B, n, cfg.d_model),
+                                             jnp.float32)
+        batch["tokens"] = jax.random.randint(ks[1], (B, S - n), 0, cfg.vocab)
+    else:
+        batch["tokens"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_train_step(arch):
+    """Reduced variant of each assigned arch: one forward + one grad step."""
+    cfg = get_arch(arch).reduced()
+    key = jax.random.PRNGKey(42)
+    params = Mo.init(key, cfg)
+    batch = _smoke_batch(cfg, key)
+    loss, grads = jax.value_and_grad(lambda p: Mo.loss(p, cfg, batch))(params)
+    assert np.isfinite(float(loss))
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+    logits, caches = Mo.prefill(params, cfg, batch)
+    assert logits.shape[0] == batch["tokens"].shape[0]
+    assert logits.shape[-1] == cfg.vocab
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "mixtral-8x7b", "mamba2-2.7b",
+                                  "zamba2-7b", "whisper-medium",
+                                  "granite-moe-3b-a800m"])
+def test_prefill_decode_consistency(arch):
+    """decode_step after prefill reproduces the full-forward logits."""
+    cfg = get_arch(arch).reduced()
+    if cfg.moe is not None:
+        # Token-dropping MoE is only prefill/decode-consistent when capacity
+        # never binds (decode routes one token with fresh capacity).
+        import dataclasses
+        from repro.configs import MoEConfig
+        cfg = dataclasses.replace(
+            cfg, moe=MoEConfig(cfg.moe.n_experts, cfg.moe.top_k,
+                               capacity_factor=float(cfg.moe.n_experts)))
+    key = jax.random.PRNGKey(7)
+    params = Mo.init(key, cfg)
+    B, S = 2, 24
+    batch = _smoke_batch(cfg, key, B=B, S=S)
+    tokens = batch["tokens"]
+
+    # full forward over S tokens
+    logits_full, _ = Mo.prefill(params, cfg, batch)
+
+    # prefill on S-1 tokens, then decode token S-1
+    batch_p = dict(batch)
+    batch_p["tokens"] = tokens[:, :-1]
+    logits_pre, caches = Mo.prefill(params, cfg, batch_p, cache_len=S + 4)
+    logits_dec, _ = Mo.decode_step(params, cfg, caches, tokens[:, -1])
+
+    np.testing.assert_allclose(
+        np.asarray(logits_dec, np.float32),
+        np.asarray(logits_full[:, -1], np.float32),
+        rtol=2e-3, atol=2e-3,
+    )
+
+
+def test_moe_routing_mass_conservation():
+    from repro.models import moe as X
+    cfg = get_arch("mixtral-8x7b").reduced()
+    key = jax.random.PRNGKey(3)
+    p = X.moe_init(key, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 16, cfg.d_model))
+    y, aux = X.moe_ffn(p, x, cfg)
+    assert y.shape == x.shape
+    assert np.isfinite(float(aux))
+    # aux loss is >= 1 at uniform routing (Switch normalization)
+    assert float(aux) > 0.5
+
+
+def test_sliding_window_attention_masks():
+    from repro.models.attention import mha
+    key = jax.random.PRNGKey(5)
+    B, S, H, dh = 1, 32, 2, 8
+    q = jax.random.normal(key, (B, S, H, dh))
+    k = jax.random.normal(jax.random.PRNGKey(6), (B, S, H, dh))
+    v = jax.random.normal(jax.random.PRNGKey(7), (B, S, H, dh))
+    full = mha(q, k, v, causal=True, window=None, chunk=8)
+    win = mha(q, k, v, causal=True, window=8, chunk=8)
+    # early positions identical (window not yet binding at t < 8)
+    np.testing.assert_allclose(np.asarray(full[:, :8]), np.asarray(win[:, :8]),
+                               rtol=1e-5, atol=1e-5)
+    # late positions differ (window binding)
+    assert float(jnp.max(jnp.abs(full[:, -1] - win[:, -1]))) > 1e-4
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "mamba2-2.7b"])
+def test_multi_token_decode_matches_full_forward(arch):
+    """Greedy 4-step decode == teacher-forced full forwards."""
+    cfg = get_arch(arch).reduced()
+    key = jax.random.PRNGKey(11)
+    params = Mo.init(key, cfg)
+    B, S, T = 2, 12, 4
+    tokens = jax.random.randint(key, (B, S + T), 0, cfg.vocab)
+
+    batch_p = {"tokens": tokens[:, :S]}
+    _, caches = Mo.prefill(params, cfg, batch_p, cache_len=S + T + 2)
+    dec = []
+    for t in range(T):
+        logits, caches = Mo.decode_step(params, cfg, caches, tokens[:, S + t])
+        dec.append(logits)
+
+    full, _ = Mo.prefill(params, cfg, {"tokens": tokens})
+    for t in range(T):
+        np.testing.assert_allclose(
+            np.asarray(dec[t], np.float32),
+            np.asarray(full[:, S + t], np.float32), rtol=3e-3, atol=3e-3)
+
+
+def test_prefill_last_only_matches_full():
+    cfg = get_arch("qwen3-1.7b").reduced()
+    params = Mo.init(jax.random.PRNGKey(1), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                                          cfg.vocab)}
+    full, _ = Mo.prefill(params, cfg, batch)
+    last, _ = Mo.prefill(params, cfg, batch, last_only=True)
+    np.testing.assert_allclose(np.asarray(last[:, 0], np.float32),
+                               np.asarray(full[:, -1], np.float32),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,104 @@
+"""Integration tests for the RCSL algorithm (paper Section 3/4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rcsl as R
+
+
+@pytest.fixture(scope="module")
+def lin_shards():
+    p = 10
+    theta = R.paper_theta_star(p)
+    shards = R.make_shards(
+        jax.random.PRNGKey(0), N_per_machine=200, m_workers=20, p=p,
+        theta_star=theta, model="linear",
+    )
+    return shards, theta
+
+
+def _rmse(a, b):
+    return float(jnp.sqrt(jnp.mean((a - b) ** 2)))
+
+
+def test_rcsl_converges_clean(lin_shards):
+    shards, theta = lin_shards
+    est, traj = R.rcsl(
+        R.LinearRegressionProblem(), shards, jax.random.PRNGKey(1),
+        alpha=0.0, rounds=6,
+    )
+    # Improvement over the master-only initial estimator.
+    assert _rmse(est, theta) < _rmse(traj[0], theta)
+    assert _rmse(est, theta) < 0.05
+
+
+@pytest.mark.parametrize("attack", ["gaussian", "omniscient", "bitflip"])
+def test_rcsl_robust_to_attacks(lin_shards, attack):
+    shards, theta = lin_shards
+    est, _ = R.rcsl(
+        R.LinearRegressionProblem(), shards, jax.random.PRNGKey(2),
+        alpha=0.15, attack=attack, rounds=8,
+    )
+    assert _rmse(est, theta) < 0.08
+    # Plain-mean aggregation is destroyed by the same attack.
+    est_mean, _ = R.rcsl(
+        R.LinearRegressionProblem(), shards, jax.random.PRNGKey(2),
+        alpha=0.15, attack=attack, rounds=8, aggregator="mean",
+    )
+    if attack != "bitflip":  # bitflip is mild on the mean
+        err_mean = _rmse(est_mean, theta)
+        # NaN/inf counts as destroyed (omniscient 1e10-scaled attack diverges).
+        assert (not np.isfinite(err_mean)) or err_mean > 5 * _rmse(est, theta)
+
+
+def test_rcsl_beats_mom_rcsl(lin_shards):
+    """Paper Tables 3-4: RMSE(RCSL-VRMOM) < RMSE(MOM-RCSL), averaged."""
+    p = 10
+    theta = R.paper_theta_star(p)
+    errs_v, errs_m = [], []
+    for rep in range(12):
+        shards = R.make_shards(
+            jax.random.PRNGKey(100 + rep), N_per_machine=200, m_workers=30,
+            p=p, theta_star=theta, model="linear",
+        )
+        kv = jax.random.PRNGKey(rep)
+        est_v, _ = R.rcsl(R.LinearRegressionProblem(), shards, kv,
+                          alpha=0.1, attack="gaussian", rounds=6)
+        est_m, _ = R.rcsl(R.LinearRegressionProblem(), shards, kv,
+                          alpha=0.1, attack="gaussian", rounds=6,
+                          aggregator="median")
+        errs_v.append(_rmse(est_v, theta))
+        errs_m.append(_rmse(est_m, theta))
+    assert np.mean(errs_v) < np.mean(errs_m)
+
+
+def test_rcsl_logistic_labelflip():
+    p = 8
+    theta = R.paper_theta_star(p)
+    shards = R.make_shards(
+        jax.random.PRNGKey(7), N_per_machine=400, m_workers=20, p=p,
+        theta_star=theta, model="logistic",
+    )
+    est, traj = R.rcsl(
+        R.LogisticRegressionProblem(), shards, jax.random.PRNGKey(8),
+        alpha=0.1, labelflip=True, rounds=8,
+    )
+    assert _rmse(est, theta) < _rmse(traj[0], theta) + 1e-6
+    assert _rmse(est, theta) < 0.15
+
+
+def test_rcsl_generic_problem_matches_linear():
+    p = 6
+    theta = R.paper_theta_star(p)
+    shards = R.make_shards(
+        jax.random.PRNGKey(11), N_per_machine=300, m_workers=10, p=p,
+        theta_star=theta, model="linear",
+    )
+    prob_g = R.GenericProblem(
+        loss_fn=lambda th, x, y: (y - x @ th) ** 2, master_steps=400, lr=0.2,
+    )
+    est_g, _ = R.rcsl(prob_g, shards, jax.random.PRNGKey(12), rounds=5)
+    est_c, _ = R.rcsl(R.LinearRegressionProblem(), shards,
+                      jax.random.PRNGKey(12), rounds=5)
+    np.testing.assert_allclose(np.asarray(est_g), np.asarray(est_c), atol=2e-2)

@@ -1,0 +1,75 @@
+"""Hypothesis property-based tests for the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import vrmom as V
+
+_settings = settings(max_examples=40, deadline=None)
+
+
+def _xbars(min_m=5, max_m=64):
+    return hnp.arrays(
+        dtype=np.float64,
+        shape=st.integers(min_m, max_m),
+        elements=st.floats(-1e3, 1e3, allow_nan=False, width=64),
+    )
+
+
+@_settings
+@given(_xbars(), st.integers(1, 20))
+def test_permutation_invariance(x, K):
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(len(x))
+    a = float(V.vrmom(jnp.asarray(x, jnp.float32), K=K))
+    b = float(V.vrmom(jnp.asarray(x[perm], jnp.float32), K=K))
+    assert np.isclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+@_settings
+@given(_xbars(), st.floats(0.1, 10.0), st.floats(-100.0, 100.0))
+def test_affine_equivariance(x, a, b):
+    x32 = jnp.asarray(x, jnp.float32)
+    lhs = float(V.vrmom(a * x32 + b, K=10))
+    rhs = a * float(V.vrmom(x32, K=10)) + b
+    tol = 1e-3 * max(1.0, abs(rhs))
+    assert abs(lhs - rhs) <= tol
+
+
+@_settings
+@given(_xbars(), st.integers(1, 30))
+def test_bounded_influence_vs_median(x, K):
+    """Remark 2: |vrmom - mom| <= s * K/2 / sum_k psi(Delta_k)."""
+    x32 = jnp.asarray(x, jnp.float32)
+    med = float(V.mom(x32))
+    s = float(V.mad_scale(x32))
+    est = float(V.vrmom(x32, K=K))
+    bound = s * V.vrmom_correction_bound(K) + 1e-4 * (1 + abs(med))
+    assert abs(est - med) <= bound
+
+
+@_settings
+@given(st.floats(-1e3, 1e3, allow_nan=False), st.integers(5, 40))
+def test_constant_inputs_exact(c, m):
+    x = jnp.full((m,), np.float32(c))
+    assert np.isclose(float(V.vrmom(x)), np.float32(c), rtol=1e-5, atol=1e-5)
+
+
+@_settings
+@given(_xbars(min_m=9), st.integers(1, 15))
+def test_minority_corruption_bounded(x, K):
+    """Corrupting < half of the workers moves the estimate by O(s + quantile gap)."""
+    x = np.sort(x)
+    m = len(x)
+    n_byz = (m - 1) // 2 - 1
+    if n_byz < 1:
+        return
+    y = x.copy()
+    y[-n_byz:] = 1e12  # adversarial blow-up
+    a = float(V.vrmom(jnp.asarray(x, jnp.float32), K=K))
+    b = float(V.vrmom(jnp.asarray(y, jnp.float32), K=K))
+    # Honest spread bounds how far the estimate can be dragged.
+    spread = x.max() - x.min() + 1e-3
+    assert abs(b - a) <= 4.0 * spread * (1.0 + V.vrmom_correction_bound(K))

@@ -1,0 +1,129 @@
+"""Statistical validation of the VRMOM estimator against the paper's theory."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import vrmom as V
+from repro.core import aggregators, attacks
+
+
+def test_sigma_k_sq_matches_theory():
+    # K=1 reduces to the median: sigma_1^2 = (1/4)/psi(0)^2 = pi/2.
+    assert V.sigma_k_sq(1) == pytest.approx(math.pi / 2, rel=1e-6)
+    # Monotone decreasing in K, limiting value pi/3 (Theorem 1).
+    vals = [V.sigma_k_sq(k) for k in (1, 2, 5, 10, 50, 200)]
+    assert all(a >= b - 1e-9 for a, b in zip(vals, vals[1:]))
+    assert vals[-1] == pytest.approx(math.pi / 3, rel=2e-2)
+    # K=5 already gives efficiency > 0.9 (paper Section 2.1).
+    assert 1.0 / V.sigma_k_sq(5) > 0.9
+
+
+def test_deltas_symmetric():
+    d = np.asarray(V.deltas(10))
+    np.testing.assert_allclose(d, -d[::-1], atol=1e-6)
+    assert np.all(np.diff(d) > 0)
+
+
+def _simulate(key, reps, m1, n, estimator):
+    """Simulate sample means directly: Xbar_j ~ N(0, 1/n) exactly."""
+    xbar = jax.random.normal(key, (reps, m1)) / jnp.sqrt(n)
+    return jax.vmap(estimator)(xbar)
+
+
+def test_vrmom_variance_reduction_matches_theorem1():
+    # Monte-Carlo: Var(VRMOM)/Var(MOM) should approach sigma_K^2 / (pi/2).
+    key = jax.random.PRNGKey(0)
+    reps, m1, n, K = 4000, 101, 1000, 10
+    est_v = _simulate(key, reps, m1, n, lambda x: V.vrmom(x, K=K, scale="mad"))
+    est_m = _simulate(key, reps, m1, n, lambda x: V.mom(x))
+    var_ratio = float(jnp.var(est_v) / jnp.var(est_m))
+    theory = V.sigma_k_sq(K) / V.sigma_mom_sq()
+    assert var_ratio == pytest.approx(theory, rel=0.15)
+    # And VRMOM strictly better than MOM.
+    assert float(jnp.var(est_v)) < float(jnp.var(est_m))
+
+
+def test_vrmom_master_scale_consistent():
+    key = jax.random.PRNGKey(1)
+    k1, k2 = jax.random.split(key)
+    m1, n = 101, 1000
+    raw = 2.0 + 3.0 * jax.random.normal(k1, (m1, n))
+    xbar = jnp.mean(raw, axis=1)
+    est = V.vrmom(xbar, K=10, scale="master", master_samples=raw[0])
+    assert abs(float(est) - 2.0) < 0.05
+
+
+def test_vrmom_byzantine_robust():
+    key = jax.random.PRNGKey(2)
+    m1, n = 101, 1000
+    xbar = jax.random.normal(key, (m1,)) / jnp.sqrt(n)
+    mask = attacks.byzantine_mask(m1, 0.3)
+    corrupted = attacks.gaussian(jax.random.PRNGKey(3), xbar, mask)
+    est = V.vrmom(corrupted, K=10, scale="mad")
+    # Remark 2: correction bounded by s * K/2 / sum psi; estimate stays near 0.
+    assert abs(float(est)) < 10.0 / math.sqrt(n)
+    # mean is destroyed by the same corruption
+    assert abs(float(jnp.mean(corrupted))) > 10 * abs(float(est))
+
+
+def test_vrmom_multidim_coordinatewise():
+    key = jax.random.PRNGKey(4)
+    xbar = jax.random.normal(key, (33, 7, 5))
+    out = V.vrmom(xbar, K=10)
+    assert out.shape == (7, 5)
+    col = V.vrmom(xbar[:, 3, 2], K=10)
+    np.testing.assert_allclose(np.asarray(out[3, 2]), np.asarray(col), rtol=1e-5)
+
+
+def test_vrmom_constant_input_returns_median():
+    xbar = jnp.full((17,), 3.25)
+    assert float(V.vrmom(xbar)) == pytest.approx(3.25)
+
+
+def test_aggregators_registry_shapes():
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (12, 6))
+    for name in aggregators.REGISTRY:
+        kw = {"n_byzantine": 2} if name == "krum" else {}
+        out = aggregators.get(name, **kw)(x)
+        assert out.shape == (6,), name
+        assert bool(jnp.all(jnp.isfinite(out))), name
+
+
+def test_trimmed_mean_robust():
+    x = jnp.concatenate([jnp.ones((18, 4)), 1e6 * jnp.ones((2, 4))])
+    out = aggregators.trimmed_mean(x, beta=0.15)
+    np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-6)
+
+
+def test_theorem4_multivariate_normality_covariance():
+    """Theorem 4 (+ Prop. 1): Monte-Carlo covariance of the multivariate
+    VRMOM/MOM estimators matches C / C_MOM (eq. 13/14/17), and
+    C <= C_MOM (Remark 4)."""
+    p_dim, rho, K = 2, 0.6, 10
+    Sigma = np.array([[1.0, rho], [rho, 1.0]])
+    C = V.vrmom_asymptotic_cov(Sigma, K)
+    C_mom = V.mom_asymptotic_cov(Sigma)
+    # diagonal consistency with the 1-D theory
+    assert C[0, 0] == pytest.approx(V.sigma_k_sq(K), rel=1e-6)
+    assert C_mom[0, 0] == pytest.approx(math.pi / 2, rel=1e-6)
+    # Remark 4: C_MOM - C positive definite
+    eigs = np.linalg.eigvalsh(C_mom - C)
+    assert np.all(eigs > 0)
+
+    # Monte-Carlo: machine means ~ N(0, Sigma/n) exactly
+    m1, n, reps = 101, 1000, 3000
+    L = np.linalg.cholesky(Sigma)
+    key = jax.random.PRNGKey(0)
+    z = jax.random.normal(key, (reps, m1, p_dim))
+    xbar = jnp.einsum("rmp,qp->rmq", z, jnp.asarray(L)) / jnp.sqrt(n)
+    est_v = jax.vmap(lambda x: V.vrmom(x, K=K, scale="mad"))(xbar)
+    est_m = jax.vmap(V.mom)(xbar)
+    N = m1 * n
+    cov_v = np.cov(np.asarray(est_v).T) * N
+    cov_m = np.cov(np.asarray(est_m).T) * N
+    np.testing.assert_allclose(cov_v, np.asarray(C), rtol=0.2, atol=0.08)
+    np.testing.assert_allclose(cov_m, np.asarray(C_mom), rtol=0.2, atol=0.12)
