@@ -9,8 +9,18 @@ ratio or std).
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
+
+if __package__ in (None, ""):
+    # Invoked as a script (``python benchmarks/run.py``): relative imports
+    # have no parent package, so register the repo root (for ``benchmarks``)
+    # and ``src`` (for ``repro``) on sys.path explicitly.
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_ROOT, os.path.join(_ROOT, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
 
 
 def main() -> None:
@@ -21,7 +31,9 @@ def main() -> None:
                     help="comma list: table1,table2,table34,table56,micro")
     args = ap.parse_args()
 
-    from . import micro, paper_tables as T
+    # absolute import works for both script mode (sys.path shim above)
+    # and ``python -m benchmarks.run`` (repo root already importable)
+    from benchmarks import micro, paper_tables as T
 
     sections = {
         "table1": lambda: T.table1(reps=500 if args.full else 60),

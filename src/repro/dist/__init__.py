@@ -1,0 +1,20 @@
+"""Distributed substrate: mesh context, sharding rules, robust reduction.
+
+Three modules (DESIGN.md §3):
+
+* ``ctx`` — ambient mesh context (``mesh_context``/``constrain``/
+  ``axis_size``) that model layers query lazily, plus the
+  robust-backward state used by ``robust_reduce.robust_dot``.
+* ``sharding`` — PartitionSpec rules: ``param_specs`` (divisibility-aware
+  TP/FSDP placement), ``batch_axes_for``, ``stacked_grad_specs``,
+  ``opt_state_specs``, ``to_named``.
+* ``robust_reduce`` — Byzantine-robust gradient aggregation: the
+  shard_map all_to_all Robust-Reduce-Scatter (``aggregate_stacked_rrs``),
+  its jit-native twin (``aggregate_stacked_auto``), and the in-backward
+  path (``robust_backward`` + ``robust_dot``).
+"""
+from __future__ import annotations
+
+from . import ctx, robust_reduce, sharding  # noqa: F401
+
+__all__ = ["ctx", "robust_reduce", "sharding"]

@@ -1,0 +1,265 @@
+"""Byzantine-robust gradient reduction over the mesh worker axes.
+
+Three execution strategies for the same semantics — coordinate-wise
+robust aggregation (VRMOM eq. 7 / MOM / trimmed mean / mean) of
+per-worker gradients stacked on a leading worker dim:
+
+* ``aggregate_stacked_rrs`` — Robust-Reduce-Scatter (RRS, DESIGN.md §3):
+  a shard_map over the mesh in which every worker shard (1) flattens and
+  concatenates all of its local gradient leaves into one f32 wire
+  vector, (2) all_to_all's it over the worker axes so each worker
+  receives all workers' values for its 1/W slice of coordinates,
+  (3) runs the coordinate-wise robust estimator on its slice, and
+  (4) all_gathers the aggregated slices back. Constant number of
+  collective rounds (one all_to_all + one all_gather) regardless of
+  worker count — the paper's one-round communication property mapped
+  onto a device mesh.
+* ``aggregate_stacked_auto`` — jit-native twin: the same estimator
+  applied per-leaf under GSPMD, no explicit collectives. Must match RRS
+  to 2e-5 (tested); used as numerical oracle and on meshes where the
+  worker axes are trivial.
+* ``robust_backward`` + ``robust_dot`` — in-backward RRS (IB-RRS,
+  DESIGN.md §2): a custom-VJP matmul whose weight gradient is the
+  stacked robust aggregate of per-worker dW, computed inside the
+  backward pass so the full per-worker gradient pytree is never
+  materialized (the stacked modes' f32 copy alone would blow HBM on
+  llama3-405b).
+
+Non-worker mesh axes (``model``) partition the *coordinates*: the
+estimators are coordinate-wise, so every tensor-parallel shard robustly
+reduces its own slice with no cross-model communication.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..core import aggregators as _agg
+from ..kernels import ref as kref
+from . import ctx as CTX
+
+__all__ = [
+    "aggregate",
+    "aggregate_stacked_rrs",
+    "aggregate_stacked_auto",
+    "robust_backward",
+    "robust_dot",
+    "robust_dot_enabled",
+]
+
+
+def _n_workers(mesh, worker_axes) -> int:
+    n = 1
+    for a in worker_axes:
+        n *= int(mesh.shape[a])
+    return n
+
+
+def _chunk_aggregate(x, method: str, K: int, use_pallas: bool = False):
+    """Coordinate-wise robust estimate of ``x: [W, C] -> [C]``."""
+    if method == "mean":
+        return jnp.mean(x.astype(jnp.float32), axis=0).astype(x.dtype)
+    if method in ("mom", "median"):
+        if use_pallas:
+            from ..kernels.ops import robust_aggregate
+            return robust_aggregate(x, "mom", use_pallas=True)
+        return kref.ref_mom(x)
+    if method == "vrmom":
+        if use_pallas:
+            from ..kernels.ops import robust_aggregate
+            return robust_aggregate(x, "vrmom", K=K, use_pallas=True)
+        return kref.ref_vrmom(x, K=K)
+    # generic coordinate-wise aggregator (e.g. trimmed_mean)
+    fn = _agg.get(method)
+    return fn(x.astype(jnp.float32), axis=0).astype(x.dtype)
+
+
+def _canonical_stacked_spec(shape, mesh, worker_axes):
+    """Default layout for a stacked-grad leaf ``[W, ...]``: worker axes
+    on dim 0, ``model`` on the last trailing dim it divides."""
+    wa = tuple(worker_axes)
+    entries = [None] * (len(shape) - 1)
+    tp = int(mesh.shape["model"]) if "model" in mesh.axis_names else 1
+    if tp > 1:
+        for i in range(len(entries) - 1, -1, -1):
+            if shape[i + 1] % tp == 0 and shape[i + 1] >= 2 * tp:
+                entries[i] = "model"
+                break
+    return P(wa if wa else None, *entries)
+
+
+def aggregate_stacked_rrs(grads, mesh, worker_axes, method: str = "vrmom",
+                          K: int = 10, *, use_pallas: bool = False,
+                          specs=None):
+    """Robust-Reduce-Scatter of a stacked-gradient pytree.
+
+    ``grads``: pytree whose leaves are ``[n_workers, *param_shape]``,
+    dim 0 sharded over ``worker_axes``. Returns the aggregated pytree
+    with the worker dim removed.
+
+    Wire format (DESIGN.md §3): each worker shard's leaves are raveled
+    to f32, concatenated in pytree-flatten order, and zero-padded to a
+    multiple of ``n_workers``; coordinate chunk ``i`` of the wire vector
+    is owned (aggregated) by worker-axis rank ``i``.
+    """
+    worker_axes = tuple(worker_axes)
+    nw = _n_workers(mesh, worker_axes)
+    if nw <= 1:
+        return aggregate_stacked_auto(grads, method, K,
+                                      use_pallas=use_pallas)
+
+    leaves, treedef = jax.tree.flatten(grads)
+    if specs is not None:
+        in_specs = jax.tree.leaves(specs,
+                                   is_leaf=lambda x: isinstance(x, P))
+    else:
+        in_specs = [_canonical_stacked_spec(l.shape, mesh, worker_axes)
+                    for l in leaves]
+    leaves = [jax.lax.with_sharding_constraint(l, NamedSharding(mesh, s))
+              for l, s in zip(leaves, in_specs)]
+    out_specs = [P(*s[1:]) for s in in_specs]
+
+    def local_rrs(*blocks):
+        w_loc = blocks[0].shape[0]
+        flat = jnp.concatenate(
+            [b.reshape(w_loc, -1).astype(jnp.float32) for b in blocks],
+            axis=1)
+        n = flat.shape[1]
+        pad = (-n) % nw
+        if pad:
+            flat = jnp.pad(flat, ((0, 0), (0, pad)))
+        # [W_loc, n_p] -> [W, n_p/W]: every worker rank now holds all
+        # workers' values for its own coordinate slice.
+        swapped = jax.lax.all_to_all(flat, worker_axes, split_axis=1,
+                                     concat_axis=0, tiled=True)
+        agg = _chunk_aggregate(swapped, method, K, use_pallas=use_pallas)
+        full = jax.lax.all_gather(agg, worker_axes, axis=0, tiled=True)
+        if pad:
+            full = full[:n]
+        outs, off = [], 0
+        for b in blocks:
+            size = b.size // w_loc
+            outs.append(full[off:off + size]
+                        .reshape(b.shape[1:]).astype(b.dtype))
+            off += size
+        return tuple(outs)
+
+    agg_leaves = shard_map(
+        local_rrs, mesh=mesh, in_specs=tuple(in_specs),
+        out_specs=tuple(out_specs), check_rep=False)(*leaves)
+    return jax.tree.unflatten(treedef, agg_leaves)
+
+
+def aggregate_stacked_auto(grads, method: str = "vrmom", K: int = 10, *,
+                           use_pallas: bool = False):
+    """jit-native equivalent of ``aggregate_stacked_rrs``: the same
+    coordinate-wise estimator per leaf, sharding left to GSPMD."""
+    def one(g):
+        flat = g.reshape(g.shape[0], -1).astype(jnp.float32)
+        out = _chunk_aggregate(flat, method, K, use_pallas=use_pallas)
+        return out.reshape(g.shape[1:]).astype(g.dtype)
+
+    return jax.tree.map(one, grads)
+
+
+def aggregate(grads, mesh, worker_axes, *, mode: str = "stacked-rrs",
+              method: str = "vrmom", K: int = 10, use_pallas: bool = False,
+              specs=None):
+    """Mode dispatcher used by ``train/step.py``.
+
+    ``stacked-rrs`` — shard_map RRS; ``stacked-auto`` — jit-native;
+    ``mean`` — plain mean over the worker dim (the non-robust baseline).
+    """
+    if mode == "stacked-rrs":
+        return aggregate_stacked_rrs(grads, mesh, worker_axes, method, K,
+                                     use_pallas=use_pallas, specs=specs)
+    if mode in ("stacked-auto", "auto"):
+        return aggregate_stacked_auto(grads, method, K,
+                                      use_pallas=use_pallas)
+    if mode == "mean":
+        return jax.tree.map(
+            lambda g: jnp.mean(g.astype(jnp.float32), axis=0).astype(g.dtype),
+            grads)
+    raise ValueError(f"unknown aggregation mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# In-backward RRS (IB-RRS): robust_dot under a robust_backward context
+# ---------------------------------------------------------------------------
+
+@contextlib.contextmanager
+def robust_backward(mesh, worker_axes, *, method: str = "vrmom", K: int = 10,
+                    use_pallas: bool = False):
+    """Enable IB-RRS: while active, the layers' ``_dot`` routes 3-D
+    matmuls through ``robust_dot`` so each weight gradient is robustly
+    aggregated over the worker axes inside the backward pass."""
+    CTX.push_robust_backward(
+        CTX.RobustBackwardState(mesh, tuple(worker_axes), method, int(K),
+                                bool(use_pallas)))
+    try:
+        yield
+    finally:
+        CTX.pop_robust_backward()
+
+
+def robust_dot_enabled() -> bool:
+    return CTX.robust_backward_state() is not None
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _robust_dot(mesh, worker_axes, method, K, use_pallas, x, w):
+    return jnp.einsum("bsd,df->bsf", x, w)
+
+
+def _robust_dot_fwd(mesh, worker_axes, method, K, use_pallas, x, w):
+    return _robust_dot(mesh, worker_axes, method, K, use_pallas, x, w), (x, w)
+
+
+def _robust_dot_bwd(mesh, worker_axes, method, K, use_pallas, res, dy):
+    x, w = res
+    dx = jnp.einsum("bsf,df->bsd", dy, w).astype(x.dtype)
+    nw = _n_workers(mesh, worker_axes)
+    B = x.shape[0]
+    if nw > 1 and B % nw:
+        # Refusing beats silently degrading to a non-robust sum: batch
+        # and worker count are static, so this fires at trace time.
+        raise ValueError(
+            f"robust_dot: batch dim {B} is not divisible by the "
+            f"{nw} workers of axes {worker_axes}; dW cannot be "
+            "grouped per worker")
+    if nw <= 1:
+        dw = jnp.einsum("bsd,bsf->df", x.astype(jnp.float32),
+                        dy.astype(jnp.float32))
+        return dx, dw.astype(w.dtype)
+    # per-worker dW, then stacked robust aggregation (x's batch dim is
+    # sharded over the worker axes, so the reshape keeps each worker's
+    # slice resident and dws lands pre-stacked on its own shard).
+    xw = x.reshape((nw, B // nw) + x.shape[1:])
+    dyw = dy.reshape((nw, B // nw) + dy.shape[1:])
+    dws = jnp.einsum("wbsd,wbsf->wdf", xw.astype(jnp.float32),
+                     dyw.astype(jnp.float32))
+    dws = jax.lax.with_sharding_constraint(
+        dws, NamedSharding(
+            mesh, _canonical_stacked_spec(dws.shape, mesh, worker_axes)))
+    dw = aggregate_stacked_rrs(dws, mesh, worker_axes, method, K,
+                               use_pallas=use_pallas)
+    return dx, dw.astype(w.dtype)
+
+
+_robust_dot.defvjp(_robust_dot_fwd, _robust_dot_bwd)
+
+
+def robust_dot(x, w):
+    """``x @ w`` (x: [B, S, D], w: [D, F]) whose dW equals the stacked
+    robust aggregate of per-worker dW. Requires an active
+    ``robust_backward`` context; the worker count must divide B."""
+    state = CTX.robust_backward_state()
+    if state is None:
+        return jnp.einsum("bsd,df->bsf", x, w)
+    return _robust_dot(state.mesh, state.worker_axes, state.method,
+                       state.K, state.use_pallas, x, w)

@@ -182,6 +182,8 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             f.write(compiled.as_text())
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # jax < 0.5 returns one dict per device program
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     # Trip-count-aware totals (XLA's cost_analysis counts while bodies
     # once -- see hlo_cost module docstring). xla_* fields keep the raw

@@ -37,37 +37,6 @@ class TrainSetup:
 
 
 
-def opt_state_specs(opt_state_shapes, params, params_specs):
-    """Specs for optimizer state mirroring the params tree.
-
-    Handles: 'm'/'v' trees shaped like params; adafactor's nested
-    {'vr','vc'} / {'v'} dicts (vr = spec[:-1], vc = spec minus dim -2).
-    """
-    flat_params, ptree = jax.tree.flatten(params)
-    flat_specs = ptree.flatten_up_to(params_specs)
-    shape2spec = {}
-    for p, s in zip(flat_params, flat_specs):
-        shape2spec.setdefault(tuple(p.shape), s)
-
-    def leaf_spec(path, leaf):
-        names = [str(getattr(k, "key", getattr(k, "name", ""))) for k in path]
-        shp = tuple(leaf.shape)
-        if shp in shape2spec:
-            return shape2spec[shp]
-        name = names[-1] if names else ""
-        # factored adafactor leaves: find the parent param by prefix match
-        if name in ("vr", "vc"):
-            for pshape, s in shape2spec.items():
-                entries = list(s) + [None] * (len(pshape) - len(s))
-                if name == "vr" and pshape[:-1] == shp:
-                    return P(*entries[:-1])
-                if name == "vc" and pshape[:-2] + pshape[-1:] == shp:
-                    return P(*entries[:-2], entries[-1])
-        return P(*([None] * leaf.ndim))
-
-    return jax.tree_util.tree_map_with_path(leaf_spec, opt_state_shapes)
-
-
 def make_train_step(
     cfg: ArchConfig,
     mesh,
@@ -96,7 +65,7 @@ def make_train_step(
     params_shapes = M.abstract_init(cfg)
     params_specs = S.param_specs(params_shapes, mesh)
     opt_shapes = jax.eval_shape(optimizer.init, params_shapes)
-    opt_specs = opt_state_specs(opt_shapes, params_shapes, params_specs)
+    opt_specs = S.opt_state_specs(opt_shapes, params_shapes, params_specs)
 
     n_byz = int(byzantine_frac * (n_workers - 1))
     mask = jnp.arange(n_workers) >= (n_workers - n_byz)
@@ -149,11 +118,32 @@ def make_train_step(
               seq = batch["tokens"].shape[1]
               micro = microbatch if microbatch is not None else (
                   max(B // n_workers, 1) if seq >= 2048 else 1)
-              with RR.robust_backward(mesh, worker_axes, method=aggregator, K=K):
+              if B % max(n_workers, 1):
+                  raise ValueError(
+                      f"inloop global batch {B} must be divisible by "
+                      f"the {n_workers} workers")
+              per_worker = B // max(n_workers, 1)
+              if micro > 1 and per_worker % micro:
+                  raise ValueError(
+                      f"inloop microbatch={micro} must divide the "
+                      f"per-worker batch {per_worker}")
+              with RR.robust_backward(mesh, worker_axes, method=aggregator,
+                                      K=K, use_pallas=use_pallas):
                   if micro > 1:
-                      bm = jax.tree.map(
-                          lambda x: x.reshape((micro, x.shape[0] // micro)
-                                              + x.shape[1:]), batch)
+                      # STRIDED split: every micro-slice must contain an
+                      # equal worker-major block from each physical worker,
+                      # or robust_dot's per-worker grouping inside the
+                      # backward stops corresponding to workers and a
+                      # single Byzantine worker owns whole micro-steps.
+                      def split_micro(x):
+                          b = x.shape[0]
+                          x = x.reshape((n_workers, micro,
+                                         b // (n_workers * micro))
+                                        + x.shape[1:])
+                          x = jnp.swapaxes(x, 0, 1)
+                          return x.reshape((micro, b // micro) + x.shape[3:])
+
+                      bm = jax.tree.map(split_micro, batch)
                       acc0 = (jnp.zeros(()),
                               jax.tree.map(lambda p: jnp.zeros(
                                   p.shape, jnp.float32), params))
@@ -198,7 +188,8 @@ def make_train_step(
                   grads = jax.tree.map(
                       lambda g: attack_fn(key, g, mask), grads)
               agg = RR.aggregate(grads, mesh, worker_axes, mode=mode,
-                                 method=aggregator, K=K, use_pallas=use_pallas)
+                                 method=aggregator, K=K, use_pallas=use_pallas,
+                                 specs=stacked_specs)
           agg = jax.lax.with_sharding_constraint(
               agg, S.to_named(mesh, params_specs))
           new_params, new_opt = optimizer.update(agg, opt_state, params)
@@ -237,7 +228,8 @@ def make_serve_steps(cfg: ArchConfig, mesh, *, shape, window="cfg"):
                                  window=window))
 
     def specs():
-        cs = S.cache_specs(cfg, cache_shapes(), mesh, batch_axes)
+        cs = S.cache_specs(cfg, cache_shapes(), mesh, batch_axes,
+                           global_batch=shape.global_batch)
         return cs
 
     return prefill_fn, decode_fn, cache_shapes, specs, batch_axes

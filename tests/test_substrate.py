@@ -165,6 +165,24 @@ def test_batch_axes_for():
     assert S.batch_axes_for(M2(), 32) == ("data",)
 
 
+def test_opt_state_specs_adafactor_factored():
+    """adafactor's factored vr/vc leaves inherit the parent param spec
+    minus the reduced dim (vr = spec[:-1], vc = spec minus dim -2)."""
+    from jax.sharding import PartitionSpec as P
+
+    params = {"w": jnp.zeros((8, 16)), "b": jnp.zeros((4,))}
+    params_specs = {"w": P("data", "model"), "b": P(None)}
+    opt = O.get("adafactor")
+    opt_shapes = jax.eval_shape(opt.init, params)
+    specs = S.opt_state_specs(opt_shapes, params, params_specs)
+    assert specs["v"]["w"]["vr"] == P("data")
+    assert specs["v"]["w"]["vc"] == P("model")
+    assert specs["v"]["b"]["v"] == P(None)
+    # bf16 momentum mirrors the param tree spec exactly
+    assert specs["m"]["w"] == P("data", "model")
+    assert specs["m"]["b"] == P(None)
+
+
 # ---------------------------------------------------------------- hlo_cost
 
 def test_hlo_cost_scan_trip_multiplication():

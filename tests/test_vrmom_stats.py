@@ -83,6 +83,36 @@ def test_vrmom_constant_input_returns_median():
     assert float(V.vrmom(xbar)) == pytest.approx(3.25)
 
 
+def test_vrmom_degenerate_scale_fallback_no_nan():
+    """All-equal inputs give MAD scale 0; the eps guard must return the
+    exact median with no NaN — including per-coordinate, when only SOME
+    coordinates are degenerate (the RRS zero-padding path hits this)."""
+    from repro.kernels import ref as kref
+
+    # fully degenerate, including the all-zero wire-padding case
+    for c in (0.0, -7.5, 1e-20):
+        out = V.vrmom(jnp.full((9, 4), c, jnp.float32), K=10)
+        assert bool(jnp.all(jnp.isfinite(out)))
+        np.testing.assert_allclose(np.asarray(out), np.float32(c),
+                                   rtol=0, atol=0)
+
+    # mixed: column 0 constant, column 1 spread
+    key = jax.random.PRNGKey(0)
+    spread = jax.random.normal(key, (9,))
+    x = jnp.stack([jnp.full((9,), 2.0), spread], axis=1)
+    out = V.vrmom(x, K=10)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert float(out[0]) == pytest.approx(2.0, abs=0)
+    # the non-degenerate coordinate still gets the full correction
+    np.testing.assert_allclose(
+        float(out[1]), float(V.vrmom(spread, K=10)), rtol=1e-6)
+
+    # the kernel oracle shares the same guard
+    kout = kref.ref_vrmom(jnp.zeros((5, 8)), K=10)
+    assert bool(jnp.all(jnp.isfinite(kout)))
+    np.testing.assert_allclose(np.asarray(kout), 0.0, rtol=0, atol=0)
+
+
 def test_aggregators_registry_shapes():
     key = jax.random.PRNGKey(5)
     x = jax.random.normal(key, (12, 6))
