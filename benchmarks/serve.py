@@ -1,0 +1,175 @@
+"""Decode-throughput benchmark for the serve engine.
+
+Measures steady-state (post-compile) greedy *decode-loop* throughput —
+prefill excluded, both loops start from the same prefilled caches — of
+the fused ``lax.scan`` loop against the per-step Python loop it
+replaced, plus the overhead of m-replica Byzantine-robust decoding over
+plain decoding.
+
+Two baselines are recorded, because the old loop's cost depends on
+whether anyone looks at the tokens:
+
+* ``python_loop`` — per-step dispatch with a per-token host read, which
+  is what a *serving* per-step loop is: every decoded token must reach
+  the host for EOS detection / streaming before the next admission
+  decision. The scanned block decode is the thing that removes this
+  per-token round-trip (the scheduler syncs once per block).
+* ``python_loop_async`` — the literal pre-engine ``examples/serve.py``
+  loop (jitted step + ``jnp.argmax`` per token, tokens only read at the
+  end), which lets XLA's async dispatch pipeline the steps and hides
+  part of the per-step cost.
+
+Emits ``BENCH_serve.json``:
+
+    {"tok_s": {"python_loop": {...}, "python_loop_async": {...},
+               "scan": {...}},
+     "speedup_scan_vs_loop_b4": ..., "speedup_scan_vs_async_loop_b4": ...,
+     "robust": {"m": 8, "aggregator": "vrmom", "tok_s": ...,
+                "overhead_x": ...}}
+
+  PYTHONPATH=src python -m benchmarks.serve [--arch mamba2-2.7b]
+      [--tokens 16] [--batches 1,4,8] [--out BENCH_serve.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_ROOT, os.path.join(_ROOT, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+
+
+def _time_steady(fn, reps: int):
+    """Best-of-``reps`` wall time after one warm-up (compile) call."""
+    fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-2.7b",
+                    help="reduced arch to serve (SSM default: O(1) decode "
+                         "state makes it the natural serving arch)")
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--batches", default="1,4,8")
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--replicas", type=int, default=8)
+    ap.add_argument("--aggregator", default="vrmom")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get as get_arch
+    from repro.models import model as M
+    from repro.serve import RobustDecodeConfig, ServeEngine
+    from repro.serve.engine import GREEDY
+
+    cfg = get_arch(args.arch).reduced()
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    max_len = args.prompt_len + args.tokens + 8
+    N = args.tokens
+    batches = [int(b) for b in args.batches.split(",")]
+
+    result = {"arch": cfg.name, "tokens": N, "prompt_len": args.prompt_len,
+              "tok_s": {"python_loop": {}, "python_loop_async": {},
+                        "scan": {}}}
+    eng = ServeEngine(cfg, params, max_len=max_len)
+    decode = jax.jit(lambda p, c, t: M.decode_step(p, cfg, c, t))
+
+    print("name,us_per_call,derived")
+    for B in batches:
+        batch = {"tokens": jax.random.randint(
+            jax.random.PRNGKey(1), (B, args.prompt_len), 0, cfg.vocab)}
+        logits0, caches0 = jax.block_until_ready(eng.prefill(batch))
+        tok0 = jnp.argmax(logits0, axis=-1).astype(jnp.int32)
+
+        def loop_stream():
+            # per-step serving loop: token read back every step (EOS /
+            # streaming gate the next admission decision on it).
+            tok, caches, out = tok0, caches0, [np.asarray(tok0)]
+            for _ in range(N - 1):
+                logits, caches = decode(params, caches, tok)
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                out.append(np.asarray(tok))
+            return np.stack(out, axis=1)
+
+        def loop_async():
+            # the literal pre-engine example loop: nothing read until
+            # the end, so async dispatch pipelines the steps.
+            tok, caches, out = tok0, caches0, [tok0]
+            for _ in range(N - 1):
+                logits, caches = decode(params, caches, tok)
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                out.append(tok)
+            return np.asarray(jnp.stack(out, axis=1))
+
+        loop_fn = eng._decode_loop_fn(N - 1, GREEDY, pool=False)
+
+        def scan_loop():
+            toks, _ = loop_fn(params, caches0, tok0, jax.random.PRNGKey(0))
+            return np.concatenate(
+                [np.asarray(tok0)[:, None], np.asarray(toks).T], axis=1)
+
+        t_loop = _time_steady(loop_stream, args.reps)
+        t_async = _time_steady(loop_async, args.reps)
+        t_scan = _time_steady(scan_loop, args.reps)
+        result["tok_s"]["python_loop"][f"b{B}"] = B * N / t_loop
+        result["tok_s"]["python_loop_async"][f"b{B}"] = B * N / t_async
+        result["tok_s"]["scan"][f"b{B}"] = B * N / t_scan
+        print(f"serve_loop_b{B},{t_loop * 1e6:.6g},{B * N / t_loop:.6g}")
+        print(f"serve_loop_async_b{B},{t_async * 1e6:.6g},"
+              f"{B * N / t_async:.6g}")
+        print(f"serve_scan_b{B},{t_scan * 1e6:.6g},{B * N / t_scan:.6g}")
+        sys.stdout.flush()
+
+    b4 = "b4" if 4 in batches else f"b{batches[0]}"
+    result["speedup_scan_vs_loop_b4"] = (
+        result["tok_s"]["scan"][b4] / result["tok_s"]["python_loop"][b4])
+    result["speedup_scan_vs_async_loop_b4"] = (
+        result["tok_s"]["scan"][b4]
+        / result["tok_s"]["python_loop_async"][b4])
+
+    # robust replicated decode overhead (full generate path, batch 4)
+    B = 4
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (B, args.prompt_len), 0, cfg.vocab)}
+    reng = ServeEngine(cfg, params, max_len=max_len,
+                       robust=RobustDecodeConfig(m=args.replicas,
+                                                 aggregator=args.aggregator))
+    t_plain = _time_steady(
+        lambda: jax.block_until_ready(eng.generate(batch, N)), args.reps)
+    t_rob = _time_steady(
+        lambda: jax.block_until_ready(reng.generate(batch, N)), args.reps)
+    result["robust"] = {
+        "m": args.replicas, "aggregator": args.aggregator,
+        "tok_s": B * N / t_rob, "overhead_x": t_rob / t_plain,
+    }
+    print(f"serve_robust_m{args.replicas},{t_rob * 1e6:.6g},"
+          f"{t_rob / t_plain:.6g}")
+
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"# wrote {args.out}: scan vs per-step loop at {b4} = "
+          f"{result['speedup_scan_vs_loop_b4']:.2f}x "
+          f"(vs async loop {result['speedup_scan_vs_async_loop_b4']:.2f}x), "
+          f"robust overhead = {result['robust']['overhead_x']:.2f}x",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -70,7 +70,9 @@ def mha(q, k, v, *, causal: bool, window: Optional[int], chunk: int,
 
     q: [B, S, H, dh]; k/v: [B, T, Hkv, dh]. ``q_offset``: absolute
     position of q[0] relative to k[0]. ``kv_len``: optional valid kv
-    length (decode with a partially-filled cache). Returns [B, S, H, dh].
+    length (decode with a partially-filled cache) — a scalar, or a
+    per-row [B] vector when rows are at different fill levels (the
+    slot-cache serving path, DESIGN.md §6). Returns [B, S, H, dh].
 
     Sharding design (DESIGN.md §5): K/V are repeated to H query heads
     (GQA groups are NOT computed via a reshape of the head axis — a
@@ -108,6 +110,12 @@ def mha(q, k, v, *, causal: bool, window: Optional[int], chunk: int,
     qp = qp.reshape(B, n_chunks, chunk, Hp, dh)
     kv_pos = jnp.arange(T)
 
+    # Per-row valid-length mask [B, T] (slot cache: rows differ); the
+    # scalar case folds into the positional mask below.
+    row_valid = None
+    if kv_len is not None and getattr(kv_len, "ndim", 0) > 0:
+        row_valid = kv_pos[None, :] < kv_len[:, None]
+
     def body(_, qc_i):
         qc, i = qc_i
         q_pos = q_offset + i * chunk + jnp.arange(chunk)
@@ -117,9 +125,11 @@ def mha(q, k, v, *, causal: bool, window: Optional[int], chunk: int,
             mask &= kv_pos[None, :] <= q_pos[:, None]
         if window is not None:
             mask &= kv_pos[None, :] > q_pos[:, None] - window
-        if kv_len is not None:
+        if kv_len is not None and row_valid is None:
             mask &= kv_pos[None, :] < kv_len
         s = jnp.where(mask[None, None], s, NEG_INF)
+        if row_valid is not None:
+            s = jnp.where(row_valid[:, None, None, :], s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
         return None, jnp.einsum("bhst,bthd->bshd", p, v)
 
@@ -186,24 +196,37 @@ def init_cache(cfg, batch: int, max_len: int, window: Optional[int] = None,
 
 
 def attn_decode(p, x1, cfg, cache: KVCache, *, window="cfg"):
-    """Single-token decode. x1: [B, 1, D]. Returns (out [B,1,D], cache)."""
+    """Single-token decode. x1: [B, 1, D]. Returns (out [B,1,D], cache).
+
+    ``cache.pos`` may be a scalar (all rows at the same fill level — the
+    classic batched path) or a per-row [B] vector (slot-cache serving,
+    DESIGN.md §6): each row then writes its K/V at its own position and
+    masks to its own valid length.
+    """
     window = cfg.sliding_window if window == "cfg" else window
     pos = cache.pos
-    positions = pos[None, None] * jnp.ones((x1.shape[0], 1), jnp.int32)
+    per_row = getattr(pos, "ndim", 0) > 0
+    if per_row:
+        positions = pos[:, None]
+    else:
+        positions = pos[None, None] * jnp.ones((x1.shape[0], 1), jnp.int32)
     q, k, v = _qkv(p, x1, cfg, positions)
     T = cache.k.shape[1]
     slot = jnp.mod(pos, T) if window else jnp.minimum(pos, T - 1)
-    ck = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
-    cv = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
-    if window:
-        # Ring buffer: all T slots valid once pos >= T; positions of slots
-        # don't matter for masking beyond validity (window == ring size).
-        kv_len = jnp.minimum(pos + 1, T)
-        out = mha(q, ck, cv, causal=False, window=None, chunk=1,
-                  q_offset=0, kv_len=kv_len)
+    if per_row:
+        upd = jax.vmap(
+            lambda c, u, s: jax.lax.dynamic_update_slice(c, u, (s, 0, 0)))
+        ck = upd(cache.k, k, slot)
+        cv = upd(cache.v, v, slot)
     else:
-        out = mha(q, ck, cv, causal=False, window=None, chunk=1,
-                  q_offset=0, kv_len=pos + 1)
+        ck = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+    # Ring buffer (window set): all T slots valid once pos >= T; slot
+    # positions don't matter for masking beyond validity (window == ring
+    # size). Linear cache: the first pos+1 slots are valid.
+    kv_len = jnp.minimum(pos + 1, T) if window else pos + 1
+    out = mha(q, ck, cv, causal=False, window=None, chunk=1,
+              q_offset=0, kv_len=kv_len)
     out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
     return out, KVCache(k=ck, v=cv, pos=pos + 1)
 

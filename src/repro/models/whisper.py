@@ -138,15 +138,18 @@ def init_cache(cfg, batch_size: int, max_len: int, window=None):
 def decode_step(p, cfg, caches: EncDecCache, token):
     dt = jnp.dtype(cfg.compute_dtype)
     h = jnp.take(p["embed"], token[:, None], axis=0).astype(dt)
-    # absolute position = self-cache fill level (same for every layer)
+    # absolute position = self-cache fill level (same for every layer);
+    # scalar in the classic path, per-row [B] under the slot cache.
     pos = caches.self_kv.pos[0]
     half = cfg.d_model // 2
     div = jnp.exp(jnp.arange(half, dtype=jnp.float32)
                   * (-jnp.log(10000.0) / cfg.d_model) * 2.0)
-    ang = pos.astype(jnp.float32) * div
-    pe = jnp.zeros((cfg.d_model,), jnp.float32)
-    pe = pe.at[0::2].set(jnp.sin(ang)).at[1::2].set(jnp.cos(ang[: cfg.d_model - half]))
-    h = h + pe.astype(dt)[None, None]
+    ang = pos.astype(jnp.float32)[..., None] * div  # [..., half]
+    pe = jnp.zeros(ang.shape[:-1] + (cfg.d_model,), jnp.float32)
+    pe = pe.at[..., 0::2].set(jnp.sin(ang))
+    pe = pe.at[..., 1::2].set(jnp.cos(ang[..., : cfg.d_model - half]))
+    pe = pe.astype(dt)
+    h = h + (pe[:, None] if pos.ndim else pe[None, None])
 
     def body(h, xs):
         lp, sc, cc = xs

@@ -1,0 +1,19 @@
+"""repro.serve — continuous-batching inference engine with
+Byzantine-robust replicated decoding (DESIGN.md §6).
+
+    cache      slot-based KV cache pool (per-slot lengths, admit/evict)
+    engine     prefill + fused scanned decode loop + sampling
+    scheduler  continuous batching: queue, mid-decode admission, retirement
+    robust     m-replica decode with robust logit aggregation + attacks
+"""
+from .cache import SlotPool, evict_slot, init_pool, pool_specs, write_slot
+from .engine import GREEDY, Sampling, ServeEngine, sample_tokens
+from .robust import RobustDecodeConfig, replica_mask, robust_logits
+from .scheduler import Completion, Request, Scheduler
+
+__all__ = [
+    "SlotPool", "init_pool", "write_slot", "evict_slot", "pool_specs",
+    "ServeEngine", "Sampling", "GREEDY", "sample_tokens",
+    "RobustDecodeConfig", "replica_mask", "robust_logits",
+    "Request", "Completion", "Scheduler",
+]

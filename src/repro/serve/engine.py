@@ -1,0 +1,267 @@
+"""Prefill-then-decode serving engine (DESIGN.md §6).
+
+Two entry styles over the same jitted step functions:
+
+* fixed-batch ``generate`` — prefill a [B, S] prompt batch, then decode
+  N tokens in ONE ``lax.scan`` dispatch (the per-step Python loop of the
+  old example dispatched the jitted step N times from the host; the scan
+  removes that per-token host round-trip and lets XLA pipeline the
+  steps).
+* slot-pool ``admit`` / ``decode_pool`` — the continuous-batching path:
+  variable-length prompts prefill one request at a time into a free slot
+  of a ``cache.SlotPool`` while the other slots keep decoding; the
+  scheduler drives the admit/decode/retire cycle.
+
+Sampling (greedy, temperature, top-k) is folded into the scanned loop so
+sampled decode is a single dispatch too. With a ``RobustDecodeConfig``
+every decode step runs replicated over ``m`` replicas and serves the
+robustly aggregated logits (``serve.robust``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as M
+from . import cache as C
+from . import robust as R
+
+__all__ = ["Sampling", "GREEDY", "sample_tokens", "ServeEngine"]
+
+
+class Sampling(NamedTuple):
+    """Static sampling config (hashable — part of the jit cache key).
+
+    method: 'greedy' | 'temperature' | 'top_k'
+    """
+
+    method: str = "greedy"
+    temperature: float = 1.0
+    top_k: int = 0
+
+
+GREEDY = Sampling()
+
+
+def sample_tokens(logits, key, sc: Sampling):
+    """logits [..., V] -> sampled token ids [...] int32."""
+    if sc.method == "greedy":
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    l = logits.astype(jnp.float32) / max(sc.temperature, 1e-6)
+    if sc.method == "top_k":
+        if sc.top_k <= 0:
+            raise ValueError("top_k sampling needs top_k > 0")
+        kth = jax.lax.top_k(l, sc.top_k)[0][..., -1:]
+        l = jnp.where(l < kth, -jnp.inf, l)
+    elif sc.method != "temperature":
+        raise ValueError(sc.method)
+    return jax.random.categorical(key, l, axis=-1).astype(jnp.int32)
+
+
+class ServeEngine:
+    """Holds (cfg, params, pool geometry) and a cache of jitted steps.
+
+    max_len:  KV capacity per slot (prompt + generated must fit).
+    n_slots:  pool capacity — concurrent sequences, decoupled from the
+              number of queued requests.
+    robust:   optional ``RobustDecodeConfig`` — decode replicated over
+              ``robust.m`` replicas with robust logit aggregation.
+    """
+
+    def __init__(self, cfg, params, *, max_len: int, n_slots: int = 4,
+                 window="cfg", robust: Optional[R.RobustDecodeConfig] = None):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = int(max_len)
+        self.n_slots = int(n_slots)
+        self.window = window
+        self.robust = robust
+        self._fns = {}
+        self._dims = C.slot_dims(self._pool_caches)
+
+    # -- pool construction --------------------------------------------------
+
+    def _pool_caches(self, n_slots: int):
+        caches = C._pool_caches(self.cfg, n_slots, self.max_len,
+                                window=self.window)
+        if self.robust is not None:
+            caches = R.stack_replicas(caches, self.robust.m)
+        return caches
+
+    def make_pool(self) -> C.SlotPool:
+        pool = C.init_pool(self.cfg, self.n_slots, self.max_len,
+                           window=self.window)
+        if self.robust is not None:
+            pool = pool._replace(
+                caches=R.stack_replicas(pool.caches, self.robust.m))
+        return pool
+
+    # -- jitted step functions (cached per static signature) ----------------
+
+    def _fn(self, key, build):
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = self._fns[key] = build()
+        return fn
+
+    def _prefill_fn(self):
+        def run(params, batch):
+            logits, caches = M.prefill(params, self.cfg, batch,
+                                       window=self.window,
+                                       cache_len=self.max_len, last_only=True)
+            return logits[:, -1], caches
+
+        return self._fn("prefill", lambda: jax.jit(run))
+
+    def _decode_loop_fn(self, n_steps: int, sc: Sampling, pool: bool):
+        """Fused decode: one dispatch for ``n_steps`` steps of
+        decode -> (attack/aggregate) -> sample, caches carried in-scan."""
+        rcfg = self.robust
+
+        def run(params, caches, tok, key):
+            def body(carry, _):
+                tok, caches, key = carry
+                key, akey, skey = jax.random.split(key, 3)
+                if rcfg is not None:
+                    logits, caches = R.robust_decode_step(
+                        params, self.cfg, caches, tok, rcfg, akey,
+                        window=self.window)
+                else:
+                    logits, caches = M.decode_step(params, self.cfg, caches,
+                                                   tok, window=self.window)
+                nxt = sample_tokens(logits, skey, sc)
+                return (nxt, caches, key), nxt
+
+            (tok, caches, _), toks = jax.lax.scan(
+                body, (tok, caches, key), None, length=n_steps)
+            return toks, caches  # toks: [n_steps, B]
+
+        return self._fn(("loop", n_steps, sc, pool), lambda: jax.jit(run))
+
+    def _decode_step_fn(self, sc: Sampling):
+        """Single-step dispatch — the Python-loop baseline the scan
+        replaces (kept for benchmarks and debugging)."""
+        rcfg = self.robust
+
+        def run(params, caches, tok, key):
+            akey, skey = jax.random.split(key)
+            if rcfg is not None:
+                logits, caches = R.robust_decode_step(
+                    params, self.cfg, caches, tok, rcfg, akey,
+                    window=self.window)
+            else:
+                logits, caches = M.decode_step(params, self.cfg, caches, tok,
+                                               window=self.window)
+            return sample_tokens(logits, skey, sc), caches
+
+        return self._fn(("step", sc), lambda: jax.jit(run))
+
+    # -- fixed-batch generation ---------------------------------------------
+
+    def prefill(self, batch):
+        """-> (last-position logits [B, V], caches)."""
+        return self._prefill_fn()(self.params, batch)
+
+    def _check_capacity(self, prompt_len: int, n_tokens: int) -> None:
+        # cache writes: prompt + one K/V per decode step (n_tokens - 1;
+        # the first token samples off the prefill logits). Beyond
+        # max_len the linear cache would silently clamp to its last
+        # slot and corrupt attention.
+        need = prompt_len + n_tokens - 1
+        if need > self.max_len:
+            raise ValueError(
+                f"prompt {prompt_len} + {n_tokens} tokens needs {need} "
+                f"cache slots > max_len {self.max_len}")
+
+    def _robust_prefill_logits(self, logits, key):
+        """Route prefill logits through the same attack + aggregation as
+        decode, so token 0 carries the robustness guarantee too. The
+        prefill forward is deterministic, so row-stacking its logits is
+        equivalent to re-running it on every replica."""
+        rep = jnp.broadcast_to(logits[None],
+                               (self.robust.m,) + logits.shape)
+        return R.robust_logits(rep, self.robust, key=key)
+
+    def _first_token(self, logits, key, sc):
+        if self.robust is not None:
+            logits = self._robust_prefill_logits(
+                logits, jax.random.fold_in(key, 1))
+        return sample_tokens(logits, jax.random.fold_in(key, 0), sc)
+
+    def generate(self, batch, n_tokens: int, sampling: Sampling = GREEDY,
+                 key=None):
+        """Prefill + scanned decode. -> tokens [B, n_tokens] int32."""
+        self._check_capacity(batch["tokens"].shape[1], n_tokens)
+        key = jax.random.PRNGKey(0) if key is None else key
+        logits, caches = self.prefill(batch)
+        if self.robust is not None:
+            caches = R.stack_replicas(caches, self.robust.m)
+        tok = self._first_token(logits, key, sampling)
+        if n_tokens == 1:
+            return tok[:, None]
+        toks, _ = self._decode_loop_fn(n_tokens - 1, sampling, pool=False)(
+            self.params, caches, tok, key)
+        return jnp.concatenate([tok[:, None], toks.T], axis=1)
+
+    def generate_python_loop(self, batch, n_tokens: int,
+                             sampling: Sampling = GREEDY, key=None):
+        """Same semantics as ``generate`` but one host dispatch per token
+        (the pre-engine decode loop) — the benchmark baseline."""
+        self._check_capacity(batch["tokens"].shape[1], n_tokens)
+        key = jax.random.PRNGKey(0) if key is None else key
+        logits, caches = self.prefill(batch)
+        if self.robust is not None:
+            caches = R.stack_replicas(caches, self.robust.m)
+        tok = self._first_token(logits, key, sampling)
+        step = self._decode_step_fn(sampling)
+        out = [tok]
+        for i in range(n_tokens - 1):
+            tok, caches = step(self.params, caches, tok,
+                               jax.random.fold_in(key, i + 1))
+            out.append(tok)
+        return jnp.stack(out, axis=1)
+
+    # -- slot-pool path (continuous batching) -------------------------------
+
+    def admit(self, pool: C.SlotPool, slot: int, batch,
+              sampling: Sampling = GREEDY, key=None):
+        """Prefill one request (batch dim 1) into ``slot``.
+
+        Runs while the other slots hold live, partially-decoded
+        sequences — their caches are untouched. Returns
+        (pool, first sampled token as a python int).
+        """
+        n = batch["tokens"].shape[0]
+        if n != 1:
+            raise ValueError(f"admit() takes one request, got batch {n}")
+        prompt_len = int(batch["tokens"].shape[1])
+        if prompt_len >= self.max_len:
+            raise ValueError(f"prompt ({prompt_len}) must leave decode room "
+                             f"in max_len ({self.max_len})")
+        key = jax.random.PRNGKey(int(slot)) if key is None else key
+        logits, caches = self.prefill(batch)
+        caches = C.vectorize_pos(caches, 1)
+        if self.robust is not None:
+            caches = R.stack_replicas(caches, self.robust.m)
+        pool = C.write_slot(pool, self._dims, caches, slot, prompt_len)
+        tok = self._first_token(logits, key, sampling)
+        return pool, int(tok[0])
+
+    def decode_pool(self, pool: C.SlotPool, cur_tok, n_steps: int,
+                    sampling: Sampling = GREEDY, key=None):
+        """Advance every slot ``n_steps`` tokens in one dispatch.
+
+        cur_tok: [n_slots] int32 — each slot's last token (free slots
+        carry a dummy; their output is discarded by the scheduler).
+        Returns (pool, toks [n_steps, n_slots]).
+        """
+        key = jax.random.PRNGKey(0) if key is None else key
+        toks, caches = self._decode_loop_fn(n_steps, sampling, pool=True)(
+            self.params, pool.caches, jnp.asarray(cur_tok, jnp.int32), key)
+        lengths = jnp.where(pool.active, pool.lengths + n_steps, pool.lengths)
+        return C.SlotPool(caches, lengths, pool.active), toks
+
+    def evict(self, pool: C.SlotPool, slot: int) -> C.SlotPool:
+        return C.evict_slot(pool, slot)

@@ -1,0 +1,145 @@
+"""Byzantine-robust replicated decoding (DESIGN.md §6).
+
+The paper's coordinate-wise robust aggregation over an untrusted worker
+axis, applied to the serving path: the decode forward runs on ``m``
+replicas, each replica emits logits for the same token positions, and
+the served logits are the coordinate-wise robust aggregate
+(VRMOM / median / trimmed mean from ``core/aggregators``) over the
+replica axis. A replica that crashes, bit-flips or is actively
+adversarial contributes one corrupted row per token; as long as fewer
+than half the replicas are corrupted the aggregate — and hence every
+greedy-decoded token — is unchanged (honest replicas are deterministic,
+so their rows are identical and the coordinate-wise median of the
+stacked logits IS the honest value; VRMOM's degenerate-scale guard,
+DESIGN.md §2, reduces it to exactly the median in that regime).
+
+``core/attacks`` fault injection is wired in for testing: the attack
+corrupts the logit rows of the replicas selected by ``replica_mask``
+before aggregation, modelling faulty workers on the wire.
+
+Replicas map onto the mesh worker axes (``dist/ctx`` conventions): the
+replica-stacked cache tree puts the replica dim on ``("pod", "data")``
+via ``replica_specs``, so each replica's forward runs resident on its
+own worker shard and only the [m, B, V] logits cross the wire —
+coordinate-wise aggregation needs no other communication.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core import aggregators as AGG
+from ..core import attacks as ATK
+from ..models import model as M
+
+__all__ = [
+    "RobustDecodeConfig",
+    "replica_mask",
+    "stack_replicas",
+    "replica_specs",
+    "robust_logits",
+    "robust_decode_step",
+]
+
+
+class RobustDecodeConfig(NamedTuple):
+    """Static config for replicated robust decode.
+
+    m:          number of decode replicas (worker-axis size).
+    aggregator: any coordinate-wise ``core/aggregators`` name. Default
+                vrmom; with identical honest rows its MAD scale is 0 and
+                the degenerate guard returns the exact median (§2), so
+                greedy tokens are provably unchanged for any aggregator
+                whose breakdown point exceeds alpha.
+    K:          VRMOM quantile levels (ignored by other aggregators).
+    attack:     ``core/attacks`` name injected on the corrupted rows
+                ("none" in production — real faults need no simulation).
+    alpha:      corrupted fraction; floor(alpha * m) rows are attacked.
+    """
+
+    m: int = 8
+    aggregator: str = "vrmom"
+    K: int = 8
+    attack: str = "none"
+    alpha: float = 0.25
+
+
+def replica_mask(m: int, alpha: float) -> jnp.ndarray:
+    """[m] bool — the last floor(alpha*m) replicas are corrupted.
+
+    Serving has no privileged master row; the aggregators are
+    permutation-invariant so the choice of rows is WLOG. floor(alpha*m)
+    with alpha < 1/2 keeps an honest strict majority.
+    """
+    n_byz = int(math.floor(alpha * m))
+    if n_byz >= (m + 1) // 2:
+        raise ValueError(f"alpha={alpha} corrupts {n_byz}/{m}: no honest "
+                         "majority, aggregation cannot be robust")
+    return jnp.arange(m) >= m - n_byz
+
+
+def stack_replicas(tree, m: int):
+    """Broadcast a cache tree to a leading replica dim: x -> [m, *x.shape]."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (m,) + x.shape), tree)
+
+
+def replica_specs(tree, worker_axes):
+    """P-tree placing the leading replica dim on the mesh worker axes."""
+    from jax.sharding import PartitionSpec as P
+
+    wa = tuple(worker_axes)
+
+    def one(x):
+        return P(wa if wa else None, *([None] * (x.ndim - 1)))
+
+    return jax.tree.map(one, tree)
+
+
+def _aggregate(logits_r, rcfg: RobustDecodeConfig):
+    """[m, B, V] replica logits -> [B, V] robust aggregate (f32 wire)."""
+    kw = {}
+    if rcfg.aggregator == "vrmom":
+        kw["K"] = rcfg.K
+    elif rcfg.aggregator == "trimmed_mean":
+        # trim exactly the corrupted fraction per end; the default 0.1
+        # would trim int(0.1*m)=0 rows at m=8 and degrade to the mean.
+        kw["beta"] = rcfg.alpha
+    fn = AGG.get(rcfg.aggregator, **kw)
+    return fn(logits_r.astype(jnp.float32), axis=0)
+
+
+def robust_logits(logits_r, rcfg: RobustDecodeConfig,
+                  key: Optional[jax.Array] = None):
+    """Corrupt the attacked rows, then robustly aggregate.
+
+    logits_r: [m, B, V] per-replica logits (the wire tensor). Returns
+    [B, V] f32 aggregated logits.
+    """
+    if rcfg.attack != "none":
+        if key is None:
+            raise ValueError("attack injection needs a PRNG key")
+        mask = replica_mask(rcfg.m, rcfg.alpha)
+        logits_r = ATK.get(rcfg.attack)(key, logits_r, mask)
+    return _aggregate(logits_r, rcfg)
+
+
+def robust_decode_step(params, cfg, rep_caches, token,
+                       rcfg: RobustDecodeConfig,
+                       key: Optional[jax.Array] = None, window="cfg"):
+    """One replicated decode step.
+
+    rep_caches: cache tree with leading replica dim [m, ...] (honest
+    replicas hold identical state; a real deployment shards the dim over
+    the worker axes via ``replica_specs``). token: [B] int32 — the same
+    tokens go to every replica. ``window`` is forwarded to the model so
+    the robust path uses the same cache geometry as the plain one.
+    Returns ([B, V] f32 robust logits, updated rep_caches).
+    """
+    logits_r, new_caches = jax.vmap(
+        lambda c: M.decode_step(params, cfg, c, token,
+                                window=window))(rep_caches)
+    return robust_logits(logits_r, rcfg, key), new_caches

@@ -1,0 +1,300 @@
+"""repro.serve: slot cache, fused decode loop, continuous batching,
+Byzantine-robust replicated decoding."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get as get_arch
+from repro.models import model as Mo
+from repro.serve import (Request, RobustDecodeConfig, Sampling, Scheduler,
+                         ServeEngine, replica_mask, robust_logits)
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = get_arch("qwen3-1.7b").reduced()
+    params = Mo.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prompt_batch(cfg, B, S, seed=1):
+    return {"tokens": jax.random.randint(jax.random.PRNGKey(seed), (B, S), 0,
+                                         cfg.vocab)}
+
+
+# ---------------------------------------------------------------------------
+# Engine: scanned decode loop
+# ---------------------------------------------------------------------------
+
+def test_scanned_loop_matches_python_loop(dense):
+    """The fused lax.scan decode must be token-identical to per-step
+    Python dispatch (greedy)."""
+    cfg, params = dense
+    eng = ServeEngine(cfg, params, max_len=48)
+    batch = _prompt_batch(cfg, B=4, S=16)
+    scan = eng.generate(batch, 12)
+    loop = eng.generate_python_loop(batch, 12)
+    assert scan.shape == (4, 12)
+    np.testing.assert_array_equal(np.asarray(scan), np.asarray(loop))
+
+
+def test_sampling_modes(dense):
+    """Temperature / top-k sampling produce in-vocab tokens and differ
+    across keys; top-k=1 degenerates to greedy."""
+    cfg, params = dense
+    eng = ServeEngine(cfg, params, max_len=40)
+    batch = _prompt_batch(cfg, B=2, S=8)
+    t = eng.generate(batch, 8, sampling=Sampling("temperature", 1.5),
+                     key=jax.random.PRNGKey(3))
+    assert bool(jnp.all((t >= 0) & (t < cfg.vocab)))
+    t2 = eng.generate(batch, 8, sampling=Sampling("temperature", 1.5),
+                      key=jax.random.PRNGKey(4))
+    assert not bool(jnp.all(t == t2))  # different keys, different draws
+    k1 = eng.generate(batch, 8, sampling=Sampling("top_k", 1.0, top_k=1),
+                      key=jax.random.PRNGKey(5))
+    greedy = eng.generate(batch, 8)
+    np.testing.assert_array_equal(np.asarray(k1), np.asarray(greedy))
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: continuous batching (satellite coverage)
+# ---------------------------------------------------------------------------
+
+def test_scheduler_variable_length_admission(dense):
+    """Variable-length prompts through the pool must match per-request
+    solo decode exactly (per-slot lengths isolate the rows)."""
+    cfg, params = dense
+    eng = ServeEngine(cfg, params, max_len=64, n_slots=3)
+    sched = Scheduler(eng, decode_block=4)
+    rs = np.random.RandomState(0)
+    prompts = [rs.randint(0, cfg.vocab, size=(n,)) for n in (5, 17, 11)]
+    uids = [sched.submit(Request(tokens=p, max_new_tokens=7))
+            for p in prompts]
+    done = sched.run()
+    assert sorted(done) == sorted(uids)
+    for u, p in zip(uids, prompts):
+        solo = eng.generate({"tokens": jnp.asarray(p)[None]}, 7)
+        assert done[u].tokens == list(map(int, solo[0]))
+        assert done[u].finished_by == "length"
+
+
+def test_scheduler_slot_reuse_after_retirement(dense):
+    """A slot freed by a short request must be reused mid-decode by a
+    queued one, without disturbing the still-running slots."""
+    cfg, params = dense
+    eng = ServeEngine(cfg, params, max_len=64, n_slots=2)
+    sched = Scheduler(eng, decode_block=2)
+    rs = np.random.RandomState(1)
+    short = Request(tokens=rs.randint(0, cfg.vocab, size=(6,)),
+                    max_new_tokens=2)
+    long = Request(tokens=rs.randint(0, cfg.vocab, size=(9,)),
+                   max_new_tokens=12)
+    late = Request(tokens=rs.randint(0, cfg.vocab, size=(4,)),
+                   max_new_tokens=8)
+    uids = [sched.submit(r) for r in (short, long, late)]
+    # only 2 slots: `late` waits until `short` retires, then decodes
+    # alongside `long`, which must be unaffected.
+    done = sched.run()
+    assert sorted(done) == sorted(uids)
+    for u, r in zip(uids, (short, long, late)):
+        assert len(done[u].tokens) == r.max_new_tokens
+        solo = eng.generate({"tokens": jnp.asarray(r.tokens)[None]},
+                            r.max_new_tokens)
+        assert done[u].tokens == list(map(int, solo[0]))
+
+
+def test_scheduler_queue_starvation(dense):
+    """More requests than slots: FIFO admission drains the whole queue."""
+    cfg, params = dense
+    eng = ServeEngine(cfg, params, max_len=48, n_slots=2)
+    sched = Scheduler(eng, decode_block=3)
+    rs = np.random.RandomState(2)
+    uids = [sched.submit(Request(tokens=rs.randint(0, cfg.vocab, size=(4 + i,)),
+                                 max_new_tokens=3))
+            for i in range(7)]
+    done = sched.run()
+    assert sorted(done) == sorted(uids)
+    assert all(len(done[u].tokens) == 3 for u in uids)
+
+
+def test_scheduler_rejects_oversized_requests(dense):
+    """A request whose prompt + budget cannot fit a slot is rejected
+    onto completed (not crashed, not silently cache-corrupted), and the
+    queue behind it still drains."""
+    cfg, params = dense
+    eng = ServeEngine(cfg, params, max_len=24, n_slots=1)
+    sched = Scheduler(eng, decode_block=2)
+    rs = np.random.RandomState(4)
+    big = sched.submit(Request(tokens=rs.randint(0, cfg.vocab, size=(40,)),
+                               max_new_tokens=4))
+    tight = sched.submit(Request(tokens=rs.randint(0, cfg.vocab, size=(10,)),
+                                 max_new_tokens=20))  # 10+20+1 > 24
+    ok = sched.submit(Request(tokens=rs.randint(0, cfg.vocab, size=(10,)),
+                              max_new_tokens=4))
+    done = sched.run()
+    assert done[big].finished_by == "rejected" and done[big].tokens == []
+    assert done[tight].finished_by == "rejected"
+    assert done[ok].finished_by == "length" and len(done[ok].tokens) == 4
+
+
+def test_engine_capacity_check(dense):
+    cfg, params = dense
+    eng = ServeEngine(cfg, params, max_len=24)
+    batch = _prompt_batch(cfg, B=1, S=20)
+    with pytest.raises(ValueError, match="cache slots"):
+        eng.generate(batch, 10)
+
+
+def test_scheduler_eos_trims_overshoot(dense):
+    """EOS mid-block stops the sequence; overshoot tokens are trimmed."""
+    cfg, params = dense
+    eng = ServeEngine(cfg, params, max_len=48, n_slots=1)
+    # find the token greedy decode emits at step 2, use it as "EOS"
+    probe = eng.generate(_prompt_batch(cfg, B=1, S=8, seed=9), 8)
+    eos = int(probe[0, 2])
+    sched = Scheduler(eng, decode_block=8)
+    tokens = np.asarray(_prompt_batch(cfg, B=1, S=8, seed=9)["tokens"][0])
+    uid = sched.submit(Request(tokens=tokens, max_new_tokens=8, eos_id=eos))
+    done = sched.run()
+    assert done[uid].finished_by == "eos"
+    assert done[uid].tokens == list(map(int, probe[0, :3]))
+
+
+@pytest.mark.parametrize("arch", ["mamba2-2.7b", "zamba2-7b",
+                                  "whisper-medium"])
+def test_pool_decode_other_families(arch):
+    """Slot pool + per-slot positions across cache layouts (SSM state,
+    hybrid grouped stacks, enc-dec cross caches)."""
+    cfg = get_arch(arch).reduced()
+    params = Mo.init(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, max_len=40, n_slots=2)
+    sched = Scheduler(eng, decode_block=2)
+    rs = np.random.RandomState(3)
+    reqs = []
+    for i in range(3):
+        extras = None
+        if cfg.family == "encdec":
+            extras = {"frames": rs.randn(cfg.encoder.n_frames,
+                                         cfg.d_model).astype(np.float32)}
+        reqs.append(Request(tokens=rs.randint(0, cfg.vocab, size=(5 + 3 * i,)),
+                            max_new_tokens=4, extras=extras))
+    uids = [sched.submit(r) for r in reqs]
+    done = sched.run()
+    for u, r in zip(uids, reqs):
+        batch = {"tokens": jnp.asarray(r.tokens)[None]}
+        if r.extras:
+            batch.update({k: jnp.asarray(v)[None]
+                          for k, v in r.extras.items()})
+        solo = eng.generate(batch, 4)
+        assert done[u].tokens == list(map(int, solo[0]))
+
+
+# ---------------------------------------------------------------------------
+# Robust replicated decoding (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_replica_mask_counts():
+    mask = replica_mask(8, 0.25)
+    assert int(mask.sum()) == 2 and not bool(mask[0])
+    with pytest.raises(ValueError):
+        replica_mask(8, 0.5)  # 4/8 corrupted: no honest majority
+
+
+@pytest.mark.parametrize("attack", ["signflip", "gaussian"])
+@pytest.mark.parametrize("aggregator", ["vrmom", "median", "trimmed_mean"])
+def test_robust_decode_token_identical_under_attack(dense, attack,
+                                                    aggregator):
+    """floor(alpha*m)=2 of m=8 replicas corrupted: greedy replicated
+    decode must be token-identical to single-replica decode."""
+    cfg, params = dense
+    batch = _prompt_batch(cfg, B=2, S=12)
+    plain = ServeEngine(cfg, params, max_len=40).generate(batch, 10)
+    kw = dict(K=8) if aggregator == "vrmom" else {}
+    reng = ServeEngine(cfg, params, max_len=40,
+                       robust=RobustDecodeConfig(
+                           m=8, aggregator=aggregator, attack=attack,
+                           alpha=0.25, **kw))
+    robust = reng.generate(batch, 10, key=jax.random.PRNGKey(11))
+    np.testing.assert_array_equal(np.asarray(robust), np.asarray(plain))
+
+
+def test_mean_aggregation_breaks_under_attack(dense):
+    """Control: non-robust mean aggregation is corrupted by an attack
+    the robust aggregators survive (omniscient: the corrupted rows drag
+    the mean to a huge negative multiple of the honest logits)."""
+    cfg, params = dense
+    batch = _prompt_batch(cfg, B=2, S=12)
+    plain = ServeEngine(cfg, params, max_len=40).generate(batch, 10)
+    meng = ServeEngine(cfg, params, max_len=40,
+                       robust=RobustDecodeConfig(m=8, aggregator="mean",
+                                                 attack="omniscient",
+                                                 alpha=0.25))
+    mean_toks = meng.generate(batch, 10, key=jax.random.PRNGKey(11))
+    assert not bool(jnp.all(mean_toks == plain))
+
+
+def test_robust_logits_exactness():
+    """With identical honest rows, the aggregate IS the honest row
+    bit-exactly (degenerate-scale guard makes VRMOM the median)."""
+    key = jax.random.PRNGKey(0)
+    honest = jax.random.normal(key, (3, 32))
+    stacked = jnp.broadcast_to(honest[None], (8,) + honest.shape)
+    rcfg = RobustDecodeConfig(m=8, aggregator="vrmom", K=8,
+                              attack="gaussian", alpha=0.25)
+    agg = robust_logits(stacked, rcfg, key=jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(np.asarray(agg), np.asarray(honest))
+
+
+# ---------------------------------------------------------------------------
+# Sharded pool smoke (cache_specs plug-in), subprocess with 8 devices
+# ---------------------------------------------------------------------------
+
+def test_pool_specs_shard_and_decode():
+    """Pool sharded via serve.cache.pool_specs on a (4 data, 2 model)
+    mesh decodes token-identically to the unsharded pool."""
+    script = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get as get_arch
+from repro.dist import ctx as CTX, sharding as S
+from repro.models import model as Mo
+from repro.serve import Request, Scheduler, ServeEngine
+from repro.serve import cache as C
+
+cfg = get_arch("qwen3-1.7b").reduced()
+params = Mo.init(jax.random.PRNGKey(0), cfg)
+eng = ServeEngine(cfg, params, max_len=32, n_slots=4)
+batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0, cfg.vocab)}
+want = np.stack([np.asarray(
+    eng.generate({"tokens": batch["tokens"][i:i+1]}, 6))[0]
+    for i in range(4)])
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+pool = eng.make_pool()
+specs = C.pool_specs(cfg, pool, mesh, batch_axes=("data",))
+named = S.to_named(mesh, specs)
+pool = jax.tree.map(lambda s, x: jax.device_put(x, s), named, pool,
+                    is_leaf=lambda x: isinstance(x, jax.sharding.NamedSharding))
+for slot in range(4):
+    pool, tok = eng.admit(pool, slot, {"tokens": batch["tokens"][slot:slot+1]})
+    assert tok == int(want[slot, 0]), (slot, tok, want[slot, 0])
+cur = np.asarray(want[:, 0], np.int32)
+with CTX.mesh_context(mesh):
+    pool, toks = eng.decode_pool(pool, cur, 5)
+got = np.concatenate([cur[:, None], np.asarray(toks).T], axis=1)
+np.testing.assert_array_equal(got, want)
+print("SHARDED-POOL-OK")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(_REPO, "src")
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, env=env, timeout=900)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-4000:]}"
+    assert "SHARDED-POOL-OK" in r.stdout
