@@ -1,43 +1,111 @@
-"""Micro-benchmarks: aggregator throughput + Pallas kernel vs oracle.
+"""Micro-benchmarks: per-method x per-backend aggregation throughput.
 
-Timing on CPU is indicative only (the kernel path runs in interpret
-mode); the derived column reports the relative accuracy / speed ratio.
+Every row times one ``core.estimator.Estimator`` spec — the repo's
+single aggregation dispatch site — so the numbers measure exactly what
+the dist/serve/train paths run. Timing on CPU is indicative only (the
+``pallas`` backend runs in interpret mode); the derived column reports
+coords/us throughput, and for the kernel-parity rows the max abs error
+vs the jnp reference.
+
+``bench_backends`` emits ``BENCH_agg.json``:
+
+    {"m": 8, "c": 65536, "us": {"vrmom": {"jnp": ..., "ref": ...,
+     "pallas": ...}, ...}, "speedup_vs_jnp": {...}}
+
+  PYTHONPATH=src python -m benchmarks.micro [--m 8] [--c 65536]
+      [--out BENCH_agg.json]
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import sys
 import time
+
+if __package__ in (None, ""):
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_ROOT, os.path.join(_ROOT, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregators
+from repro.core.estimator import (COORDINATEWISE_METHODS,
+                                  WHOLE_VECTOR_METHODS, Estimator)
 from repro.kernels import ref as kref
 from repro.kernels.vrmom import vrmom_pallas
 
+BACKENDS = ("jnp", "ref", "pallas")
+
 
 def _time(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
+def _estimators(m):
+    """One representative spec per method, valid at worker count m."""
+    for method in COORDINATEWISE_METHODS:
+        if method == "mom":  # alias of median — skip the duplicate row
+            continue
+        yield Estimator(method=method, K=10, beta=max(0.1, 1.5 / m))
+    for method in WHOLE_VECTOR_METHODS:
+        yield Estimator(method=method, n_byzantine=max(m // 10, 1))
+
+
 def bench_aggregators(m=33, c=65536):
+    """Throughput of every method on its auto-resolved backend."""
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (m, c))
     rows = []
-    for name in ("mean", "median", "vrmom", "trimmed_mean",
-                 "geometric_median", "krum"):
-        kw = {"n_byzantine": 2} if name == "krum" else {}
-        fn = jax.jit(aggregators.get(name, **kw))
+    for est in _estimators(m):
+        fn = jax.jit(lambda x, e=est: e.apply(x))
         us = _time(fn, x)
-        rows.append((f"micro/agg/{name}/m{m}xc{c}", us, c / max(us, 1e-9)))
+        rows.append((f"micro/agg/{est.method}/{est.resolve_backend()}"
+                     f"/m{m}xc{c}", us, c / max(us, 1e-9)))
+    return rows
+
+
+def bench_backends(m=8, c=65536, out=None):
+    """Same coordinate-wise method across all three backends.
+
+    The serving path's worker count (m=8 replicas) is the default: it is
+    where the fused path's advantage matters (BENCH_serve.json).
+    """
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (m, c))
+    rows, us_table = [], {}
+    for est in _estimators(m):
+        if not est.coordinatewise:
+            continue
+        us_table[est.method] = {}
+        for backend in BACKENDS:
+            e = est._replace(backend=backend)
+            fn = jax.jit(lambda x, e=e: e.apply(x))
+            us = _time(fn, x)
+            us_table[est.method][backend] = us
+            rows.append((f"micro/backend/{est.method}/{backend}/m{m}xc{c}",
+                         us, c / max(us, 1e-9)))
+    if out:
+        result = {
+            "m": m, "c": c, "us": us_table,
+            "speedup_vs_jnp": {
+                meth: {b: t["jnp"] / t[b] for b in BACKENDS}
+                for meth, t in us_table.items()},
+        }
+        with open(out, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"# wrote {out}", file=sys.stderr)
     return rows
 
 
 def bench_kernel(m=32, c=65536, K=10):
+    """Pallas(interpret) vs jnp-oracle parity + indicative timing."""
     key = jax.random.PRNGKey(1)
     x = jax.random.normal(key, (m, c))
     oracle = jax.jit(lambda x: kref.ref_vrmom(x, K=K))
@@ -50,3 +118,20 @@ def bench_kernel(m=32, c=65536, K=10):
         (f"micro/kernel/ref_vrmom/m{m}xc{c}", us_ref, 0.0),
         (f"micro/kernel/pallas_interpret/m{m}xc{c}", us_pal, err),
     ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=8,
+                    help="worker/replica count for the backend table")
+    ap.add_argument("--c", type=int, default=65536)
+    ap.add_argument("--out", default="BENCH_agg.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in bench_backends(m=args.m, c=args.c, out=args.out):
+        print(f"{row[0]},{row[1]:.6g},{row[2]:.6g}")
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

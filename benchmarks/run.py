@@ -40,7 +40,8 @@ def main() -> None:
         "table2": lambda: T.table2(reps=500 if args.full else 120),
         "table34": lambda: T.tables34(reps=500 if args.full else 12),
         "table56": lambda: T.tables56(reps=500 if args.full else 8),
-        "micro": lambda: micro.bench_aggregators() + micro.bench_kernel(),
+        "micro": lambda: (micro.bench_aggregators() + micro.bench_backends()
+                          + micro.bench_kernel()),
     }
     only = set(args.only.split(",")) if args.only else set(sections)
 

@@ -150,7 +150,7 @@ def main() -> None:
         jax.random.PRNGKey(1), (B, args.prompt_len), 0, cfg.vocab)}
     reng = ServeEngine(cfg, params, max_len=max_len,
                        robust=RobustDecodeConfig(m=args.replicas,
-                                                 aggregator=args.aggregator))
+                                                 estimator=args.aggregator))
     t_plain = _time_steady(
         lambda: jax.block_until_ready(eng.generate(batch, N)), args.reps)
     t_rob = _time_steady(

@@ -41,12 +41,14 @@ def main():
         rmse = float(jnp.sqrt(jnp.mean(est**2)))
         print(f"  20% Byzantine, {name:5s}: RMSE {rmse:.5f}")
 
-    # --- fused Pallas kernel (interpret mode on CPU) ----------------------
-    from repro.kernels import vrmom_pallas
+    # --- the unified Estimator layer (DESIGN.md §7) -----------------------
+    # One spec drives every subsystem (dist RRS, serving, training);
+    # backend="auto" runs the fused Pallas kernel (interpret on CPU).
+    from repro.core import Estimator
     x = 3.0 + jax.random.normal(jax.random.PRNGKey(2), (33, 4096))
-    out = vrmom_pallas(x, K=10, interpret=True)
+    out = Estimator(method="vrmom", K=10).apply(x)
     ref = jax.vmap(lambda c: V.vrmom(c, K=10), in_axes=1)(x)
-    print(f"pallas kernel max|err| vs estimator: "
+    print(f"fused Estimator max|err| vs jnp estimator: "
           f"{float(jnp.max(jnp.abs(out - ref))):.2e}")
 
 

@@ -131,7 +131,7 @@ def main():
     robust = None
     if args.robust:
         robust = RobustDecodeConfig(m=args.replicas,
-                                    aggregator=args.aggregator,
+                                    estimator=args.aggregator,
                                     attack=args.attack, alpha=args.alpha)
         print(f"robust decode: m={args.replicas} {args.aggregator}, "
               f"attack={args.attack} alpha={args.alpha}")

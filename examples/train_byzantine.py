@@ -38,7 +38,7 @@ def build_cfg(d_model, layers, vocab=8192):
 
 
 def run(cfg, mesh, *, steps, aggregator, byz, attack, seq, batch, lr, log):
-    setup = make_train_step(cfg, mesh, aggregator=aggregator,
+    setup = make_train_step(cfg, mesh, estimator=aggregator,
                             mode="stacked-rrs" if aggregator != "mean"
                             else "mean",
                             byzantine_frac=byz, attack=attack, lr=lr,

@@ -1,10 +1,13 @@
 """Core contribution of the paper: VRMOM estimator + RCSL algorithm."""
-from . import aggregators, attacks, rcsl, vrmom
+from . import aggregators, attacks, estimator, rcsl, vrmom
+from .estimator import Estimator
 from .vrmom import mom, vrmom as vrmom_estimate, sigma_k_sq, sigma_mom_sq
 
 __all__ = [
     "aggregators",
     "attacks",
+    "estimator",
+    "Estimator",
     "rcsl",
     "vrmom",
     "mom",

@@ -8,11 +8,16 @@ and on flattened gradient shards (distributed training — see
 Implemented: mean, coordinate-wise median (MOM), VRMOM (the paper's
 contribution), trimmed mean (Yin et al. 2018), geometric median (Feng et
 al. 2014; Weiszfeld iterations), Krum (Blanchard et al. 2017).
+
+These are the ``backend="jnp"`` execution functions of the unified
+``core.estimator.Estimator`` layer (DESIGN.md §7) — the single dispatch
+site for every robust-aggregation call in the repo. Use an Estimator
+rather than calling these directly from subsystem code.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Optional
+import warnings
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +33,6 @@ __all__ = [
     "geometric_median",
     "krum",
     "vrmom",
-    "get",
     "REGISTRY",
 ]
 
@@ -42,9 +46,20 @@ def median(x, axis: int = 0):
 
 
 def trimmed_mean(x, beta: float = 0.1, axis: int = 0):
-    """Coordinate-wise beta-trimmed mean: drop the beta fraction at each end."""
+    """Coordinate-wise beta-trimmed mean: drop the beta fraction at each end.
+
+    ``int(beta*m) == 0`` trims nothing and the "trimmed" mean is the
+    plain mean — zero robustness. That is almost always a configuration
+    mistake (e.g. beta=0.1 at m=8), so it warns; ``Estimator.validate``
+    upgrades it to a trace-time error.
+    """
     m = x.shape[axis]
     k = int(beta * m)
+    if k == 0:
+        warnings.warn(
+            f"trimmed_mean: beta={beta} trims int({beta}*{m}) = 0 rows per "
+            f"end — degenerating to the NON-robust mean. Raise beta to at "
+            f"least {1.0 / m:.4g}.", RuntimeWarning, stacklevel=2)
     xs = jnp.sort(x, axis=axis)
     sl = [slice(None)] * x.ndim
     sl[axis] = slice(k, m - k if m - k > k else k + 1)
@@ -89,6 +104,8 @@ def vrmom(x, K: int = 10, scale="mad", master_samples=None, axis: int = 0):
     return _v.vrmom(x, K=K, axis=axis, scale=scale, master_samples=master_samples)
 
 
+# Enumeration only (tests, docs). Dispatch goes through
+# core.estimator.Estimator — there is deliberately no get() here.
 REGISTRY = {
     "mean": mean,
     "median": median,
@@ -98,11 +115,3 @@ REGISTRY = {
     "krum": krum,
     "vrmom": vrmom,
 }
-
-
-def get(name: str, **kwargs) -> Aggregator:
-    """Look up an aggregator by name, binding keyword options."""
-    fn = REGISTRY[name]
-    if kwargs:
-        return functools.partial(fn, **kwargs)
-    return fn

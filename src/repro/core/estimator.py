@@ -1,0 +1,221 @@
+"""Unified robust-aggregation layer: one backend-dispatched Estimator.
+
+The paper's entire contribution is one operation — coordinate-wise
+robust aggregation over a worker axis (VRMOM eq. 7; trimmed mean per Yin
+et al. 2018) — and every subsystem (dist RRS, the robust backward, the
+replicated serving path, the statistical experiments) needs exactly that
+operation with different performance constraints. ``Estimator`` is the
+single dispatch site (DESIGN.md §7): a hashable spec
+
+    Estimator(method, K=10, beta=0.1, backend="auto")
+
+with ``apply(x, axis=0)`` mapping ``[m, ...] -> [...]``. Backends:
+
+* ``"jnp"``    — the plain :mod:`repro.core.aggregators` functions.
+  The only backend for the whole-vector estimators (geometric median,
+  Krum), and the reference semantics for everything else.
+* ``"ref"``    — the fused single-reshape jnp oracles in
+  :mod:`repro.kernels.ref` (coordinate-wise methods only).
+* ``"pallas"`` — the fused one-pass kernel family in
+  :mod:`repro.kernels.vrmom`: median / VRMOM / trimmed mean / mean all
+  ride one odd-even sorting network over the worker axis in VMEM
+  (interpret mode off-TPU, so the same path runs everywhere).
+* ``"auto"``   — the fused Pallas kernel when the method supports it
+  (the worker dim is always static under jit), ``kernels/ref``
+  otherwise for coordinate-wise methods, ``jnp`` for whole-vector ones.
+
+Specs are NamedTuples: usable as jit static arguments, as custom-VJP
+nondiff arguments, and inside other static configs
+(``serve.robust.RobustDecodeConfig``, ``dist.ctx.RobustBackwardState``).
+
+Validation happens at trace time (shapes are static): ``validate(m)``
+rejects a ``trimmed_mean`` whose ``int(beta*m) == 0`` (it would silently
+degrade to the mean — the exact failure mode of beta=0.1 at m=8) and
+``require_coordinatewise()`` rejects whole-vector estimators for the
+chunked/RRS wire format, where aggregating a coordinate *shard* as if it
+were a full vector would produce wrong results (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Union
+
+import jax.numpy as jnp
+
+from . import aggregators as _A
+
+__all__ = [
+    "Estimator",
+    "COORDINATEWISE_METHODS",
+    "WHOLE_VECTOR_METHODS",
+    "METHODS",
+    "BACKENDS",
+]
+
+# Coordinate-wise methods act independently per coordinate, so they can
+# be sharded/chunked arbitrarily (the RRS wire format relies on this).
+COORDINATEWISE_METHODS = ("mean", "median", "mom", "trimmed_mean", "vrmom")
+# Whole-vector methods score/select entire worker rows; chunking them
+# changes their semantics, so they are valid only on full vectors.
+WHOLE_VECTOR_METHODS = ("geometric_median", "krum")
+METHODS = COORDINATEWISE_METHODS + WHOLE_VECTOR_METHODS
+BACKENDS = ("auto", "jnp", "ref", "pallas")
+
+# Methods the auto backend routes to the fused kernel: the ones whose
+# order statistics ride the sorting network. The mean gains nothing from
+# the kernel (one masked sum — BENCH_agg.json shows plain jnp/ref wins),
+# so auto sends it to ref; backend="pallas" still accepts it explicitly.
+_FUSED_METHODS = frozenset(("median", "mom", "trimmed_mean", "vrmom"))
+
+
+class Estimator(NamedTuple):
+    """Robust-aggregation spec: method + knobs + execution backend.
+
+    method:      one of ``METHODS`` ("mom" is an alias of "median").
+    K:           VRMOM quantile levels (ignored by other methods).
+    beta:        trimmed-mean trim fraction per end (ignored otherwise).
+    backend:     one of ``BACKENDS``; see module docstring.
+    n_byzantine: Krum's assumed corrupted-row count (ignored otherwise).
+    interpret:   force Pallas interpret mode (None = auto: interpret
+                 off-TPU). Test/bench knob only.
+    """
+
+    method: str = "vrmom"
+    K: int = 10
+    beta: float = 0.1
+    backend: str = "auto"
+    n_byzantine: int = 0
+    interpret: Optional[bool] = None
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def coerce(cls, spec: Union[str, "Estimator"], **defaults) -> "Estimator":
+        """Normalize a method name or an Estimator into an Estimator.
+
+        ``defaults`` are constructor overrides applied only when coercing
+        from a string — an explicit Estimator is taken verbatim.
+        """
+        if isinstance(spec, cls):
+            return spec
+        if isinstance(spec, str):
+            return cls(method=spec, **defaults)
+        raise TypeError(
+            f"expected a method name or an Estimator, got {type(spec)!r}")
+
+    # -- predicates ---------------------------------------------------------
+
+    @property
+    def coordinatewise(self) -> bool:
+        return self.method in COORDINATEWISE_METHODS
+
+    def require_coordinatewise(self, where: str = "chunked/RRS aggregation"):
+        """Whole-vector estimators cannot ride the coordinate-wise wire
+        format: RRS hands each worker a coordinate *shard*, and scoring
+        shards as if they were full vectors silently yields wrong
+        results. Reject at trace time instead."""
+        if not self.coordinatewise:
+            raise ValueError(
+                f"estimator {self.method!r} is a whole-vector estimator "
+                f"(selects/scores entire worker rows) and cannot be used "
+                f"for {where}: the coordinate-wise wire format would hand "
+                f"it shards of coordinates and produce wrong shards. Use "
+                f"one of {COORDINATEWISE_METHODS} instead.")
+        return self
+
+    def validate(self, m: int) -> "Estimator":
+        """Trace-time validation of the spec against a worker count."""
+        if self.method not in METHODS:
+            raise ValueError(
+                f"unknown estimator method {self.method!r}; "
+                f"known: {METHODS}")
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; known: {BACKENDS}")
+        if self.backend in ("ref", "pallas"):
+            self.require_coordinatewise(f"backend={self.backend!r}")
+        if m < 1:
+            raise ValueError(f"worker axis must be non-empty, got m={m}")
+        if self.method == "trimmed_mean":
+            k = int(self.beta * m)
+            if k == 0:
+                raise ValueError(
+                    f"trimmed_mean with beta={self.beta} trims "
+                    f"int({self.beta}*{m}) = 0 rows per end and silently "
+                    f"degrades to the mean (no robustness). Raise beta to "
+                    f"at least {1.0 / m:.4g} or use another method.")
+            if m - 2 * k < 1:
+                raise ValueError(
+                    f"trimmed_mean with beta={self.beta} trims "
+                    f"2*{k} >= m={m} rows: nothing left to average")
+        if self.method == "vrmom" and self.K < 1:
+            raise ValueError(f"vrmom needs K >= 1, got K={self.K}")
+        return self
+
+    # -- dispatch -----------------------------------------------------------
+
+    def resolve_backend(self) -> str:
+        """The concrete backend ``apply`` will run ("auto" resolved).
+
+        Worker dims are always static under jit, so "auto" picks the
+        fused Pallas kernel whenever the method has one (off-TPU it runs
+        in interpret mode — same code path, host execution), the fused
+        ref oracle for any fused-less coordinate-wise method, and jnp
+        for whole-vector estimators.
+        """
+        if self.backend != "auto":
+            return self.backend
+        if not self.coordinatewise:
+            return "jnp"
+        if self.method in _FUSED_METHODS:
+            return "pallas"
+        return "ref"
+
+    def apply(self, x, axis: int = 0):
+        """Aggregate ``x`` over ``axis``: ``[.., m, ..] -> [..]``.
+
+        Validates the spec against the (static) worker count, resolves
+        the backend, and runs the estimator. Computation is f32
+        internally on the fused backends; output dtype matches input.
+        """
+        m = x.shape[axis]
+        self.validate(m)
+        backend = self.resolve_backend()
+        if backend == "jnp":
+            return self._apply_jnp(x, axis)
+        self.require_coordinatewise(f"backend={backend!r}")
+        if axis != 0:
+            x = jnp.moveaxis(x, axis, 0)
+        shape = x.shape[1:]
+        flat = x.reshape(m, -1)
+        if backend == "ref":
+            out = self._apply_ref(flat)
+        else:
+            from ..kernels.vrmom import aggregate_pallas
+
+            out = aggregate_pallas(flat, method=self.method, K=self.K,
+                                   beta=self.beta, interpret=self.interpret)
+        return out.reshape(shape)
+
+    def _apply_jnp(self, x, axis: int):
+        if self.method == "mean":
+            return _A.mean(x, axis=axis)
+        if self.method in ("median", "mom"):
+            return _A.median(x, axis=axis)
+        if self.method == "trimmed_mean":
+            return _A.trimmed_mean(x, beta=self.beta, axis=axis)
+        if self.method == "vrmom":
+            return _A.vrmom(x, K=self.K, axis=axis)
+        if self.method == "geometric_median":
+            return _A.geometric_median(x, axis=axis)
+        return _A.krum(x, n_byzantine=self.n_byzantine, axis=axis)
+
+    def _apply_ref(self, flat):
+        from ..kernels import ref as _R
+
+        if self.method == "mean":
+            return _R.ref_mean(flat)
+        if self.method in ("median", "mom"):
+            return _R.ref_mom(flat)
+        if self.method == "trimmed_mean":
+            return _R.ref_trimmed_mean(flat, beta=self.beta)
+        return _R.ref_vrmom(flat, K=self.K)

@@ -20,7 +20,8 @@ from typing import Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from . import aggregators, attacks
+from . import attacks
+from .estimator import Estimator
 from .vrmom import vrmom as _vrmom
 
 
@@ -142,11 +143,26 @@ def aggregate_gradients(
     per_sample_grads_master=None,
     **agg_kwargs,
 ):
-    """Aggregate stacked per-machine gradients ``[m+1, p]`` (eq. 18/20)."""
-    if aggregator == "vrmom":
-        master_samples = per_sample_grads_master if scale == "master" else None
-        return _vrmom(grads, K=K, scale=scale, master_samples=master_samples)
-    return aggregators.get(aggregator, **agg_kwargs)(grads)
+    """Aggregate stacked per-machine gradients ``[m+1, p]`` (eq. 18/20).
+
+    VRMOM with a non-default scale — the paper-faithful ``'master'``
+    (H0 per-sample std) or an explicit array — is handled here: those
+    scale modes need inputs only the statistical path has. Everything
+    else goes through the unified ``Estimator`` layer on its jnp backend
+    (the [m+1, p] stacks of the statistical experiments are too small
+    for the fused kernels to matter, and whole-vector estimators stay
+    usable on full vectors).
+    """
+    est = Estimator.coerce(aggregator, backend="jnp", **agg_kwargs)
+    if isinstance(aggregator, str) and est.method == "vrmom":
+        est = est._replace(K=K)  # bind the legacy K arg; an explicit
+        # Estimator keeps its own K verbatim
+    non_mad = not (isinstance(scale, str) and scale == "mad")
+    if est.method == "vrmom" and non_mad:
+        master = (per_sample_grads_master
+                  if isinstance(scale, str) and scale == "master" else None)
+        return _vrmom(grads, K=est.K, scale=scale, master_samples=master)
+    return est.apply(grads, axis=0)
 
 
 def rcsl(

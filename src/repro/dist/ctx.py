@@ -116,11 +116,12 @@ def constrain(x, *entries):
 # ---------------------------------------------------------------------------
 
 class RobustBackwardState(NamedTuple):
+    """Active IB-RRS config: mesh + worker axes + the Estimator spec
+    (``core.estimator.Estimator``) that ``robust_dot`` aggregates with."""
+
     mesh: object
     worker_axes: Tuple[str, ...]
-    method: str
-    K: int
-    use_pallas: bool = False
+    estimator: object
 
 
 _RB_STACK: list = []

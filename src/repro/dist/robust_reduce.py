@@ -25,6 +25,13 @@ per-worker gradients stacked on a leading worker dim:
   materialized (the stacked modes' f32 copy alone would blow HBM on
   llama3-405b).
 
+Which estimator runs, and on which backend, is a single
+``core.estimator.Estimator`` spec (DESIGN.md §7) — every function here
+takes one (or a method name, coerced) instead of loose method/K/flag
+arguments. Whole-vector estimators (geometric median, Krum) are rejected
+at trace time: the RRS wire format hands each worker a coordinate
+*shard*, which only coordinate-wise estimators can aggregate correctly.
+
 Non-worker mesh axes (``model``) partition the *coordinates*: the
 estimators are coordinate-wise, so every tensor-parallel shard robustly
 reduces its own slice with no cross-model communication.
@@ -33,14 +40,14 @@ from __future__ import annotations
 
 import contextlib
 import functools
+from typing import Union
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..core import aggregators as _agg
-from ..kernels import ref as kref
+from ..core.estimator import Estimator
 from . import ctx as CTX
 
 __all__ = [
@@ -52,6 +59,8 @@ __all__ = [
     "robust_dot_enabled",
 ]
 
+EstimatorLike = Union[str, Estimator]
+
 
 def _n_workers(mesh, worker_axes) -> int:
     n = 1
@@ -60,23 +69,10 @@ def _n_workers(mesh, worker_axes) -> int:
     return n
 
 
-def _chunk_aggregate(x, method: str, K: int, use_pallas: bool = False):
-    """Coordinate-wise robust estimate of ``x: [W, C] -> [C]``."""
-    if method == "mean":
-        return jnp.mean(x.astype(jnp.float32), axis=0).astype(x.dtype)
-    if method in ("mom", "median"):
-        if use_pallas:
-            from ..kernels.ops import robust_aggregate
-            return robust_aggregate(x, "mom", use_pallas=True)
-        return kref.ref_mom(x)
-    if method == "vrmom":
-        if use_pallas:
-            from ..kernels.ops import robust_aggregate
-            return robust_aggregate(x, "vrmom", K=K, use_pallas=True)
-        return kref.ref_vrmom(x, K=K)
-    # generic coordinate-wise aggregator (e.g. trimmed_mean)
-    fn = _agg.get(method)
-    return fn(x.astype(jnp.float32), axis=0).astype(x.dtype)
+def _wire_estimator(est: EstimatorLike) -> Estimator:
+    """Coerce + reject estimators that cannot ride the RRS wire format."""
+    return Estimator.coerce(est).require_coordinatewise(
+        "chunked/RRS aggregation (dist.robust_reduce)")
 
 
 def _canonical_stacked_spec(shape, mesh, worker_axes):
@@ -93,9 +89,8 @@ def _canonical_stacked_spec(shape, mesh, worker_axes):
     return P(wa if wa else None, *entries)
 
 
-def aggregate_stacked_rrs(grads, mesh, worker_axes, method: str = "vrmom",
-                          K: int = 10, *, use_pallas: bool = False,
-                          specs=None):
+def aggregate_stacked_rrs(grads, mesh, worker_axes,
+                          est: EstimatorLike = "vrmom", *, specs=None):
     """Robust-Reduce-Scatter of a stacked-gradient pytree.
 
     ``grads``: pytree whose leaves are ``[n_workers, *param_shape]``,
@@ -107,11 +102,11 @@ def aggregate_stacked_rrs(grads, mesh, worker_axes, method: str = "vrmom",
     multiple of ``n_workers``; coordinate chunk ``i`` of the wire vector
     is owned (aggregated) by worker-axis rank ``i``.
     """
+    est = _wire_estimator(est)
     worker_axes = tuple(worker_axes)
     nw = _n_workers(mesh, worker_axes)
     if nw <= 1:
-        return aggregate_stacked_auto(grads, method, K,
-                                      use_pallas=use_pallas)
+        return aggregate_stacked_auto(grads, est)
 
     leaves, treedef = jax.tree.flatten(grads)
     if specs is not None:
@@ -137,7 +132,7 @@ def aggregate_stacked_rrs(grads, mesh, worker_axes, method: str = "vrmom",
         # workers' values for its own coordinate slice.
         swapped = jax.lax.all_to_all(flat, worker_axes, split_axis=1,
                                      concat_axis=0, tiled=True)
-        agg = _chunk_aggregate(swapped, method, K, use_pallas=use_pallas)
+        agg = est.apply(swapped, axis=0)
         full = jax.lax.all_gather(agg, worker_axes, axis=0, tiled=True)
         if pad:
             full = full[:n]
@@ -155,32 +150,31 @@ def aggregate_stacked_rrs(grads, mesh, worker_axes, method: str = "vrmom",
     return jax.tree.unflatten(treedef, agg_leaves)
 
 
-def aggregate_stacked_auto(grads, method: str = "vrmom", K: int = 10, *,
-                           use_pallas: bool = False):
+def aggregate_stacked_auto(grads, est: EstimatorLike = "vrmom"):
     """jit-native equivalent of ``aggregate_stacked_rrs``: the same
     coordinate-wise estimator per leaf, sharding left to GSPMD."""
+    est = _wire_estimator(est)
+
     def one(g):
         flat = g.reshape(g.shape[0], -1).astype(jnp.float32)
-        out = _chunk_aggregate(flat, method, K, use_pallas=use_pallas)
+        out = est.apply(flat, axis=0)
         return out.reshape(g.shape[1:]).astype(g.dtype)
 
     return jax.tree.map(one, grads)
 
 
 def aggregate(grads, mesh, worker_axes, *, mode: str = "stacked-rrs",
-              method: str = "vrmom", K: int = 10, use_pallas: bool = False,
-              specs=None):
+              est: EstimatorLike = "vrmom", specs=None):
     """Mode dispatcher used by ``train/step.py``.
 
     ``stacked-rrs`` — shard_map RRS; ``stacked-auto`` — jit-native;
     ``mean`` — plain mean over the worker dim (the non-robust baseline).
     """
     if mode == "stacked-rrs":
-        return aggregate_stacked_rrs(grads, mesh, worker_axes, method, K,
-                                     use_pallas=use_pallas, specs=specs)
+        return aggregate_stacked_rrs(grads, mesh, worker_axes, est,
+                                     specs=specs)
     if mode in ("stacked-auto", "auto"):
-        return aggregate_stacked_auto(grads, method, K,
-                                      use_pallas=use_pallas)
+        return aggregate_stacked_auto(grads, est)
     if mode == "mean":
         return jax.tree.map(
             lambda g: jnp.mean(g.astype(jnp.float32), axis=0).astype(g.dtype),
@@ -193,14 +187,13 @@ def aggregate(grads, mesh, worker_axes, *, mode: str = "stacked-rrs",
 # ---------------------------------------------------------------------------
 
 @contextlib.contextmanager
-def robust_backward(mesh, worker_axes, *, method: str = "vrmom", K: int = 10,
-                    use_pallas: bool = False):
+def robust_backward(mesh, worker_axes, est: EstimatorLike = "vrmom"):
     """Enable IB-RRS: while active, the layers' ``_dot`` routes 3-D
     matmuls through ``robust_dot`` so each weight gradient is robustly
     aggregated over the worker axes inside the backward pass."""
     CTX.push_robust_backward(
-        CTX.RobustBackwardState(mesh, tuple(worker_axes), method, int(K),
-                                bool(use_pallas)))
+        CTX.RobustBackwardState(mesh, tuple(worker_axes),
+                                _wire_estimator(est)))
     try:
         yield
     finally:
@@ -211,16 +204,16 @@ def robust_dot_enabled() -> bool:
     return CTX.robust_backward_state() is not None
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
-def _robust_dot(mesh, worker_axes, method, K, use_pallas, x, w):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _robust_dot(mesh, worker_axes, est, x, w):
     return jnp.einsum("bsd,df->bsf", x, w)
 
 
-def _robust_dot_fwd(mesh, worker_axes, method, K, use_pallas, x, w):
-    return _robust_dot(mesh, worker_axes, method, K, use_pallas, x, w), (x, w)
+def _robust_dot_fwd(mesh, worker_axes, est, x, w):
+    return _robust_dot(mesh, worker_axes, est, x, w), (x, w)
 
 
-def _robust_dot_bwd(mesh, worker_axes, method, K, use_pallas, res, dy):
+def _robust_dot_bwd(mesh, worker_axes, est, res, dy):
     x, w = res
     dx = jnp.einsum("bsf,df->bsd", dy, w).astype(x.dtype)
     nw = _n_workers(mesh, worker_axes)
@@ -246,8 +239,7 @@ def _robust_dot_bwd(mesh, worker_axes, method, K, use_pallas, res, dy):
     dws = jax.lax.with_sharding_constraint(
         dws, NamedSharding(
             mesh, _canonical_stacked_spec(dws.shape, mesh, worker_axes)))
-    dw = aggregate_stacked_rrs(dws, mesh, worker_axes, method, K,
-                               use_pallas=use_pallas)
+    dw = aggregate_stacked_rrs(dws, mesh, worker_axes, est)
     return dx, dw.astype(w.dtype)
 
 
@@ -261,5 +253,4 @@ def robust_dot(x, w):
     state = CTX.robust_backward_state()
     if state is None:
         return jnp.einsum("bsd,df->bsf", x, w)
-    return _robust_dot(state.mesh, state.worker_axes, state.method,
-                       state.K, state.use_pallas, x, w)
+    return _robust_dot(state.mesh, state.worker_axes, state.estimator, x, w)

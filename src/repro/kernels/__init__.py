@@ -1,4 +1,9 @@
-"""Pallas TPU kernels for the paper's aggregation hot-spot."""
-from . import ops, ref
-from .ops import robust_aggregate
-from .vrmom import mom_pallas, vrmom_pallas
+"""Pallas TPU kernels for the paper's aggregation hot-spot.
+
+Execution entry points only — dispatch policy (method/backend selection)
+is ``repro.core.estimator.Estimator``, the single aggregation dispatch
+site (DESIGN.md §7).
+"""
+from . import ref
+from .vrmom import (aggregate_pallas, mean_pallas, mom_pallas,
+                    trimmed_mean_pallas, vrmom_pallas)

@@ -1,18 +1,23 @@
 """Pure-jnp oracles for the aggregation kernels.
 
 These are the reference semantics the Pallas kernels must match:
-coordinate-wise MOM / VRMOM over the leading (worker) axis with the
-MAD-based scale (DESIGN.md §2). Median over an even worker count is the
-average of the two middle order statistics (numpy convention).
+coordinate-wise mean / MOM / trimmed mean / VRMOM over the leading
+(worker) axis with the MAD-based scale (DESIGN.md §2). Median over an
+even worker count is the average of the two middle order statistics
+(numpy convention). Dispatch policy lives in
+``core.estimator.Estimator``; these are execution entry points.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.vrmom import deltas, psi_sum
+from repro.core.vrmom import _MAD_CONST, deltas, psi_sum
 
-_MAD_CONST = 0.6744897501960817  # ndtri(0.75)
+
+def ref_mean(x):
+    """x: [M, C] -> [C] coordinate-wise mean (f32 accumulation)."""
+    return jnp.mean(x.astype(jnp.float32), axis=0).astype(x.dtype)
 
 
 def ref_mom(x):
@@ -20,8 +25,27 @@ def ref_mom(x):
     return jnp.median(x.astype(jnp.float32), axis=0).astype(x.dtype)
 
 
+def ref_trimmed_mean(x, beta: float = 0.1):
+    """x: [M, C] -> [C] coordinate-wise beta-trimmed mean.
+
+    Trims ``int(beta*M)`` order statistics at each end — the caller
+    (``Estimator.validate``) guarantees the trim count is non-zero.
+    """
+    m = x.shape[0]
+    k = int(beta * m)
+    xs = jnp.sort(x.astype(jnp.float32), axis=0)
+    return jnp.mean(xs[k : m - k if m - k > k else k + 1], axis=0).astype(
+        x.dtype)
+
+
 def ref_vrmom(x, K: int = 10, eps: float = 1e-12):
-    """x: [M, C] -> [C] VRMOM (eq. 7) with MAD scale."""
+    """x: [M, C] -> [C] VRMOM (eq. 7) with MAD scale.
+
+    Quantile counts accumulate k-at-a-time (K passes over [M, C]) so the
+    [M, C, K] broadcast the naive expression materializes never exists —
+    same trick as the fused kernel, and what makes this the fast jnp
+    path for the serving-scale [m, B*V] stacks.
+    """
     xf = x.astype(jnp.float32)
     M = xf.shape[0]
     med = jnp.median(xf, axis=0)
@@ -29,7 +53,9 @@ def ref_vrmom(x, K: int = 10, eps: float = 1e-12):
     s = mad / _MAD_CONST
     z = (xf - med[None, :]) / jnp.maximum(s, eps)[None, :]
     d = deltas(K, dtype=jnp.float32)
-    counts = jnp.sum(z[..., None] <= d, axis=-1).astype(jnp.float32)
+    counts = jnp.zeros_like(z)
+    for k in range(K):
+        counts = counts + (z <= d[k]).astype(jnp.float32)
     total = jnp.sum(counts - K / 2.0, axis=0)
     out = med - s * total / (M * psi_sum(K))
     return jnp.where(s <= eps, med, out).astype(x.dtype)

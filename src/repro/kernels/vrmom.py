@@ -1,16 +1,22 @@
-"""Fused VRMOM / MOM aggregation as a Pallas TPU kernel.
+"""Fused robust-aggregation kernel family as Pallas TPU kernels.
 
 The paper's only compute hot-spot is the aggregation itself (Remark 1:
 O(m+n) vs O(m log m)); on TPU the aggregation of an m-way stack of
-gradient chunks is purely memory-bound, so the kernel's job is to do the
-median + MAD + quantile-count correction in ONE pass over the [m, C]
+gradient chunks or replica logits is purely memory-bound, so the
+kernel's job is to do the whole estimate in ONE pass over the [m, C]
 stack held in VMEM — a single HBM read of the stack and a single [C]
 write, instead of the >= 4 passes (median, abs-dev, median, correction)
 a composition of jnp ops would take.
 
-TPU adaptation choices (DESIGN.md §6):
+One kernel, four methods (DESIGN.md §7): ``median``/``mom``, ``vrmom``,
+``trimmed_mean`` and ``mean`` all share the entry point. The sorted rows
+are already resident in VMEM for the median, so the trimmed mean (a
+static slice-and-average of the same sorted block) is essentially free,
+and the mean skips the network entirely but reuses the tiling.
 
-* The worker axis m is small and static (16 or 32 = the data/pod×data
+TPU adaptation choices (DESIGN.md §6/§7):
+
+* The worker axis m is small and static (replica count or the data/pod
   mesh axes), so order statistics are computed with an **odd-even
   transposition sorting network** over the sublane axis: m compare-
   exchange passes of stride-2 slices — no gathers (Pallas TPU has no
@@ -21,7 +27,11 @@ TPU adaptation choices (DESIGN.md §6):
   compile-time constants (K static), accumulated k-at-a-time to keep the
   VMEM footprint at one [m, C_tile] block.
 
-Grid: 1-D over coordinate tiles; block [m_pad, C_TILE] in VMEM.
+Grid: 1-D over coordinate tiles; block [m_pad, C_TILE] in VMEM. Batched
+inputs ([m, B, V] logit stacks from the replicated decode path) are
+handled by the entry-point reshape: every estimator is coordinate-wise,
+so trailing dims flatten into the coordinate axis — the serve decode
+``lax.scan`` calls the same kernel the gradient path uses.
 """
 from __future__ import annotations
 
@@ -31,10 +41,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.vrmom import _deltas_cached, psi_sum
+from repro.core.vrmom import _MAD_CONST, _deltas_cached, psi_sum
 
-_MAD_CONST = 0.6744897501960817
-DEFAULT_TILE = 512
+DEFAULT_TILE = 512        # compiled TPU path: [m_pad, 512] block in VMEM
+INTERPRET_TILE = 65536    # interpret mode: amortize per-grid-step
+                          # interpreter overhead (host memory, no VMEM cap)
+
+__all__ = [
+    "aggregate_pallas",
+    "vrmom_pallas",
+    "mom_pallas",
+    "trimmed_mean_pallas",
+    "mean_pallas",
+]
 
 
 def _sort_rows(x, m_pad):
@@ -59,13 +78,26 @@ def _median_of_sorted(xs, m):
     return 0.5 * (xs[(m - 1) // 2] + xs[m // 2])
 
 
-def _kernel(x_ref, o_ref, *, m, m_pad, K, vr, eps):
+def _kernel(x_ref, o_ref, *, m, m_pad, method, K, k_trim, eps):
     x = x_ref[...].astype(jnp.float32)  # [m_pad, C]
-    xs = _sort_rows(x, m_pad)
+    if method == "mean":
+        # padded rows are +inf: mask them out instead of sorting
+        row_valid = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0) < m
+        o_ref[...] = (jnp.sum(jnp.where(row_valid, x, 0.0), axis=0)
+                      / m).astype(o_ref.dtype)
+        return
+    xs = _sort_rows(x, m_pad)  # +inf padding sorts past the honest rows
+    if method == "trimmed_mean":
+        # rows k_trim..m-k_trim-1 of the already-sorted block: the trim
+        # is a static slice, so the trimmed mean costs one extra sum.
+        seg = xs[k_trim : m - k_trim]
+        o_ref[...] = (jnp.sum(seg, axis=0) / seg.shape[0]).astype(o_ref.dtype)
+        return
     med = _median_of_sorted(xs, m)  # [C]
-    if not vr:
+    if method == "median":
         o_ref[...] = med.astype(o_ref.dtype)
         return
+    # vrmom: MAD scale + quantile-count correction, same VMEM block
     dev = jnp.abs(x - med[None, :])  # padded rows are +inf already
     devs = _sort_rows(dev, m_pad)
     mad = _median_of_sorted(devs, m)
@@ -92,9 +124,11 @@ def _pad_rows(x, m_pad):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("K", "vr", "tile", "interpret", "eps")
+    jax.jit,
+    static_argnames=("method", "K", "k_trim", "tile", "interpret", "eps"),
 )
-def _vrmom_2d(x, K: int, vr: bool, tile: int, interpret: bool, eps: float):
+def _agg_2d(x, method: str, K: int, k_trim: int, tile: int, interpret: bool,
+            eps: float):
     m, c = x.shape
     m_pad = m + (m % 2)  # sorting network wants an even row count
     tile = min(tile, max(c, 1))
@@ -103,7 +137,8 @@ def _vrmom_2d(x, K: int, vr: bool, tile: int, interpret: bool, eps: float):
     if c_pad != c:
         xp = jnp.pad(xp, ((0, 0), (0, c_pad - c)), constant_values=1.0)
     out = pl.pallas_call(
-        functools.partial(_kernel, m=m, m_pad=m_pad, K=K, vr=vr, eps=eps),
+        functools.partial(_kernel, m=m, m_pad=m_pad, method=method, K=K,
+                          k_trim=k_trim, eps=eps),
         grid=(c_pad // tile,),
         in_specs=[pl.BlockSpec((m_pad, tile), lambda i: (0, i))],
         out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
@@ -117,24 +152,59 @@ def _default_interpret():
     return jax.default_backend() != "tpu"
 
 
-def vrmom_pallas(x, K: int = 10, tile: int = DEFAULT_TILE, interpret=None,
+def aggregate_pallas(x, method: str = "vrmom", K: int = 10, beta: float = 0.1,
+                     tile=None, interpret=None, eps: float = 1e-12):
+    """Fused aggregation over axis 0: ``[m, ...] -> [...]``.
+
+    ``method``: median/mom | vrmom | trimmed_mean | mean. Trailing dims
+    are coordinates — ``[m, B, V]`` logit stacks and ``[m, C]`` gradient
+    chunks take the same path. ``tile=None`` picks per mode: a
+    VMEM-sized block when compiled, a wide block when interpreted (the
+    per-grid-step interpreter overhead dominates otherwise —
+    ``BENCH_agg.json``). Dispatch policy lives in
+    ``core.estimator.Estimator``; this is the execution entry point.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    if tile is None:
+        tile = INTERPRET_TILE if interpret else DEFAULT_TILE
+    method = "median" if method == "mom" else method
+    if method not in ("median", "vrmom", "trimmed_mean", "mean"):
+        raise ValueError(f"no fused kernel for method {method!r}")
+    m = x.shape[0]
+    k_trim = 0
+    if method == "trimmed_mean":
+        k_trim = int(beta * m)
+        if k_trim == 0 or m - 2 * k_trim < 1:
+            raise ValueError(
+                f"trimmed_mean kernel: beta={beta} at m={m} trims "
+                f"{k_trim} rows per end — spec must be validated "
+                f"(Estimator.validate) before dispatch")
+    shape = x.shape[1:]
+    x2 = x.reshape(m, -1)
+    out = _agg_2d(x2, method=method, K=K, k_trim=k_trim, tile=tile,
+                  interpret=bool(interpret), eps=eps)
+    return out.reshape(shape)
+
+
+def vrmom_pallas(x, K: int = 10, tile=None, interpret=None,
                  eps: float = 1e-12):
     """Fused VRMOM over axis 0. x: [m, ...] -> [...]. MAD scale."""
-    if interpret is None:
-        interpret = _default_interpret()
-    shape = x.shape[1:]
-    x2 = x.reshape(x.shape[0], -1)
-    out = _vrmom_2d(x2, K=K, vr=True, tile=tile, interpret=bool(interpret),
-                    eps=eps)
-    return out.reshape(shape)
+    return aggregate_pallas(x, "vrmom", K=K, tile=tile, interpret=interpret,
+                            eps=eps)
 
 
-def mom_pallas(x, tile: int = DEFAULT_TILE, interpret=None):
+def mom_pallas(x, tile=None, interpret=None):
     """Fused coordinate-wise median over axis 0."""
-    if interpret is None:
-        interpret = _default_interpret()
-    shape = x.shape[1:]
-    x2 = x.reshape(x.shape[0], -1)
-    out = _vrmom_2d(x2, K=1, vr=False, tile=tile, interpret=bool(interpret),
-                    eps=1e-12)
-    return out.reshape(shape)
+    return aggregate_pallas(x, "median", tile=tile, interpret=interpret)
+
+
+def trimmed_mean_pallas(x, beta: float = 0.1, tile=None, interpret=None):
+    """Fused coordinate-wise beta-trimmed mean over axis 0."""
+    return aggregate_pallas(x, "trimmed_mean", beta=beta, tile=tile,
+                            interpret=interpret)
+
+
+def mean_pallas(x, tile=None, interpret=None):
+    """Coordinate-wise mean over axis 0 (shares the kernel tiling)."""
+    return aggregate_pallas(x, "mean", tile=tile, interpret=interpret)

@@ -22,6 +22,7 @@ from repro.configs import get as get_arch
 from repro.data import lm_batch, shard_batch
 from repro.dist import sharding as S
 from repro.models import model as M
+from repro.core.estimator import Estimator
 from repro.train.step import make_train_step
 
 
@@ -41,6 +42,9 @@ def main():
                     choices=["vrmom", "mom", "trimmed_mean", "mean"])
     ap.add_argument("--mode", default="stacked-rrs")
     ap.add_argument("--K", type=int, default=10)
+    ap.add_argument("--beta", type=float, default=None,
+                    help="trimmed_mean trim fraction per end (default: "
+                         "0.1, raised to 1/workers when 0.1 trims no rows)")
     ap.add_argument("--byzantine", type=float, default=0.0)
     ap.add_argument("--attack", default="gaussian")
     ap.add_argument("--checkpoint", default=None)
@@ -54,9 +58,13 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
 
+    n_workers = data  # worker axes = ("data",) on this 2-axis mesh
+    beta = args.beta if args.beta is not None else max(0.1, 1.0 / n_workers)
     setup = make_train_step(
-        cfg, mesh, aggregator=args.aggregator, mode=args.mode, K=args.K,
-        lr=args.lr, byzantine_frac=args.byzantine, attack=args.attack)
+        cfg, mesh,
+        estimator=Estimator(method=args.aggregator, K=args.K, beta=beta),
+        mode=args.mode, lr=args.lr, byzantine_frac=args.byzantine,
+        attack=args.attack)
     optimizer = O.get(cfg.optimizer, lr=args.lr)
 
     params = M.init(jax.random.PRNGKey(0), cfg)

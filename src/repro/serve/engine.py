@@ -80,6 +80,12 @@ class ServeEngine:
         self.robust = robust
         self._fns = {}
         self._dims = C.slot_dims(self._pool_caches)
+        if robust is not None:
+            # batch-dim indices of the UNSTACKED pool tree: the replica
+            # dim the probe saw at axis 0 shifts every slot dim by one.
+            self._pool_flat_dims = jax.tree.map(
+                lambda d: d - 1 if d >= 0 else d, self._dims)
+        self._prefill_dims_cache = {}
 
     # -- pool construction --------------------------------------------------
 
@@ -115,19 +121,60 @@ class ServeEngine:
 
         return self._fn("prefill", lambda: jax.jit(run))
 
+    def _prefill_dims(self, batch):
+        """Per-leaf batch-dim indices of the prefill cache tree.
+
+        Structural, like ``cache.slot_dims``: the prefill constructor is
+        probed under ``eval_shape`` at two batch sizes (abstract — no
+        compute) and the dim that tracks the batch is the batch dim.
+        Keyed by the batch's field set (encdec extras change the tree).
+        """
+        key = tuple(sorted(batch))
+        dims = self._prefill_dims_cache.get(key)
+        if dims is None:
+            def make(n):
+                b = {k: jnp.zeros((n,) + v.shape[1:], v.dtype)
+                     for k, v in batch.items()}
+                return M.prefill(self.params, self.cfg, b, window=self.window,
+                                 cache_len=self.max_len, last_only=True)[1]
+
+            dims = self._prefill_dims_cache[key] = C.slot_dims(make)
+        return dims
+
     def _decode_loop_fn(self, n_steps: int, sc: Sampling, pool: bool):
         """Fused decode: one dispatch for ``n_steps`` steps of
-        decode -> (attack/aggregate) -> sample, caches carried in-scan."""
+        decode -> (attack/aggregate) -> sample, caches carried in-scan.
+
+        Robust decode runs replica-FLAT (``robust.flatten_replicas``):
+        the m replicas ride the batch dim through one ``decode_step``
+        call per scan step, the [m*B, V] logits reshape to the [m, B, V]
+        wire stack, and the fused Estimator kernel aggregates it in-scan.
+        The pool path passes (and receives) the replica-STACKED layout —
+        admit/evict write [m, ...] rows — and the layout round-trip
+        happens inside the jitted program so XLA fuses it with the
+        first/last cache accesses instead of materializing eager
+        transpose copies of the whole pool per block. The generate path
+        passes pre-flattened caches (its conversion is once per call).
+        """
         rcfg = self.robust
+        flat_dims = (self._pool_flat_dims
+                     if pool and rcfg is not None else None)
 
         def run(params, caches, tok, key):
+            if flat_dims is not None:
+                caches = R.flatten_replicas(caches, flat_dims, rcfg.m)
+
             def body(carry, _):
                 tok, caches, key = carry
                 key, akey, skey = jax.random.split(key, 3)
                 if rcfg is not None:
-                    logits, caches = R.robust_decode_step(
-                        params, self.cfg, caches, tok, rcfg, akey,
-                        window=self.window)
+                    flat_tok = jnp.tile(tok, rcfg.m)  # replica-major rows
+                    logits_f, caches = M.decode_step(params, self.cfg, caches,
+                                                     flat_tok,
+                                                     window=self.window)
+                    logits_r = logits_f.reshape((rcfg.m, tok.shape[0])
+                                                + logits_f.shape[1:])
+                    logits = R.robust_logits(logits_r, rcfg, akey)
                 else:
                     logits, caches = M.decode_step(params, self.cfg, caches,
                                                    tok, window=self.window)
@@ -136,6 +183,8 @@ class ServeEngine:
 
             (tok, caches, _), toks = jax.lax.scan(
                 body, (tok, caches, key), None, length=n_steps)
+            if flat_dims is not None:
+                caches = R.unflatten_replicas(caches, flat_dims, rcfg.m)
             return toks, caches  # toks: [n_steps, B]
 
         return self._fn(("loop", n_steps, sc, pool), lambda: jax.jit(run))
@@ -175,20 +224,39 @@ class ServeEngine:
                 f"prompt {prompt_len} + {n_tokens} tokens needs {need} "
                 f"cache slots > max_len {self.max_len}")
 
-    def _robust_prefill_logits(self, logits, key):
-        """Route prefill logits through the same attack + aggregation as
-        decode, so token 0 carries the robustness guarantee too. The
-        prefill forward is deterministic, so row-stacking its logits is
-        equivalent to re-running it on every replica."""
-        rep = jnp.broadcast_to(logits[None],
-                               (self.robust.m,) + logits.shape)
-        return R.robust_logits(rep, self.robust, key=key)
-
     def _first_token(self, logits, key, sc):
-        if self.robust is not None:
-            logits = self._robust_prefill_logits(
-                logits, jax.random.fold_in(key, 1))
-        return sample_tokens(logits, jax.random.fold_in(key, 0), sc)
+        """Sample token 0 from the prefill logits (jitted, cached).
+
+        With a robust config the logits route through the same attack +
+        aggregation as decode, so token 0 carries the robustness
+        guarantee too: the prefill forward is deterministic, so
+        row-stacking its logits is equivalent to re-running it on every
+        replica.
+        """
+        rcfg = self.robust
+
+        def run(logits, key):
+            if rcfg is not None:
+                rep = jnp.broadcast_to(logits[None],
+                                       (rcfg.m,) + logits.shape)
+                logits = R.robust_logits(rep, rcfg,
+                                         key=jax.random.fold_in(key, 1))
+            return sample_tokens(logits, jax.random.fold_in(key, 0), sc)
+
+        return self._fn(("first", sc), lambda: jax.jit(run))(logits, key)
+
+    def _stack_flatten_fn(self, batch):
+        """Jitted prefill-cache -> replica-flat conversion (cached per
+        batch structure: the dims tree keys the compiled program)."""
+        dims = self._prefill_dims(batch)
+        leaves, treedef = jax.tree.flatten(dims)
+        m = self.robust.m
+
+        def run(caches):
+            return R.flatten_replicas(R.stack_replicas(caches, m), dims, m)
+
+        return self._fn(("stack-flatten", tuple(leaves), treedef),
+                        lambda: jax.jit(run))
 
     def generate(self, batch, n_tokens: int, sampling: Sampling = GREEDY,
                  key=None):
@@ -196,11 +264,11 @@ class ServeEngine:
         self._check_capacity(batch["tokens"].shape[1], n_tokens)
         key = jax.random.PRNGKey(0) if key is None else key
         logits, caches = self.prefill(batch)
-        if self.robust is not None:
-            caches = R.stack_replicas(caches, self.robust.m)
         tok = self._first_token(logits, key, sampling)
         if n_tokens == 1:
             return tok[:, None]
+        if self.robust is not None:
+            caches = self._stack_flatten_fn(batch)(caches)
         toks, _ = self._decode_loop_fn(n_tokens - 1, sampling, pool=False)(
             self.params, caches, tok, key)
         return jnp.concatenate([tok[:, None], toks.T], axis=1)
@@ -258,6 +326,9 @@ class ServeEngine:
         Returns (pool, toks [n_steps, n_slots]).
         """
         key = jax.random.PRNGKey(0) if key is None else key
+        # the pool rests replica-stacked (admit/evict write [m, ...]
+        # rows); the jitted loop runs the block replica-flat and
+        # restores the layout before returning.
         toks, caches = self._decode_loop_fn(n_steps, sampling, pool=True)(
             self.params, pool.caches, jnp.asarray(cur_tok, jnp.int32), key)
         lengths = jnp.where(pool.active, pool.lengths + n_steps, pool.lengths)

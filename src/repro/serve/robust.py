@@ -3,8 +3,8 @@
 The paper's coordinate-wise robust aggregation over an untrusted worker
 axis, applied to the serving path: the decode forward runs on ``m``
 replicas, each replica emits logits for the same token positions, and
-the served logits are the coordinate-wise robust aggregate
-(VRMOM / median / trimmed mean from ``core/aggregators``) over the
+the served logits are the coordinate-wise robust aggregate (a
+``core.estimator.Estimator`` — VRMOM / median / trimmed mean) over the
 replica axis. A replica that crashes, bit-flips or is actively
 adversarial contributes one corrupted row per token; as long as fewer
 than half the replicas are corrupted the aggregate — and hence every
@@ -12,6 +12,12 @@ greedy-decoded token — is unchanged (honest replicas are deterministic,
 so their rows are identical and the coordinate-wise median of the
 stacked logits IS the honest value; VRMOM's degenerate-scale guard,
 DESIGN.md §2, reduces it to exactly the median in that regime).
+
+Aggregation runs on the Estimator's fused backend (DESIGN.md §7): the
+``[m, B, V]`` logit stack goes through the one-pass sorting-network
+kernel *inside* the decode ``lax.scan`` — not a per-token composition of
+jnp medians — which is what closes most of the robust-decode overhead
+recorded in ``BENCH_serve.json``.
 
 ``core/attacks`` fault injection is wired in for testing: the attack
 corrupts the logit rows of the replicas selected by ``replica_mask``
@@ -25,14 +31,15 @@ coordinate-wise aggregation needs no other communication.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
-from typing import NamedTuple, Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
-from ..core import aggregators as AGG
 from ..core import attacks as ATK
+from ..core.estimator import Estimator
 from ..models import model as M
 
 __all__ = [
@@ -40,37 +47,66 @@ __all__ = [
     "replica_mask",
     "stack_replicas",
     "replica_specs",
+    "flatten_replicas",
+    "unflatten_replicas",
     "robust_logits",
     "robust_decode_step",
 ]
 
 
-class RobustDecodeConfig(NamedTuple):
+@dataclasses.dataclass(frozen=True)
+class RobustDecodeConfig:
     """Static config for replicated robust decode.
 
     m:          number of decode replicas (worker-axis size).
-    aggregator: any coordinate-wise ``core/aggregators`` name. Default
-                vrmom; with identical honest rows its MAD scale is 0 and
-                the degenerate guard returns the exact median (§2), so
-                greedy tokens are provably unchanged for any aggregator
-                whose breakdown point exceeds alpha.
-    K:          VRMOM quantile levels (ignored by other aggregators).
+    estimator:  a coordinate-wise ``core.estimator.Estimator``, or a
+                method name (coerced: ``K`` binds to VRMOM, and
+                trimmed_mean's beta binds to ``alpha`` — the default 0.1
+                would trim int(0.1*m)=0 rows at m=8 and silently degrade
+                to the mean). Default vrmom; with identical honest rows
+                its MAD scale is 0 and the degenerate guard returns the
+                exact median (§2), so greedy tokens are provably
+                unchanged for any estimator whose breakdown point
+                exceeds alpha.
+    K:          VRMOM quantile levels (used when coercing a name).
     attack:     ``core/attacks`` name injected on the corrupted rows
                 ("none" in production — real faults need no simulation).
     alpha:      corrupted fraction; floor(alpha * m) rows are attacked.
+
+    The spec is validated against ``m`` at construction (trace time):
+    a trimmed_mean that trims zero rows, or a whole-vector estimator
+    (which cannot aggregate a logit stack coordinate-wise), raises here
+    rather than serving non-robust tokens.
     """
 
     m: int = 8
-    aggregator: str = "vrmom"
+    estimator: Union[str, Estimator] = "vrmom"
     K: int = 8
     attack: str = "none"
     alpha: float = 0.25
+
+    def __post_init__(self):
+        est = self.estimator
+        if isinstance(est, str):
+            est = Estimator(method=est)
+            if est.method == "vrmom":
+                est = est._replace(K=self.K)
+            if est.method == "trimmed_mean":
+                est = est._replace(beta=self.alpha)
+        elif not isinstance(est, Estimator):
+            raise TypeError(
+                f"estimator must be a method name or an Estimator, "
+                f"got {type(est)!r}")
+        est.require_coordinatewise(
+            "replicated logit aggregation (serve.robust)")
+        est.validate(self.m)
+        object.__setattr__(self, "estimator", est)
 
 
 def replica_mask(m: int, alpha: float) -> jnp.ndarray:
     """[m] bool — the last floor(alpha*m) replicas are corrupted.
 
-    Serving has no privileged master row; the aggregators are
+    Serving has no privileged master row; the estimators are
     permutation-invariant so the choice of rows is WLOG. floor(alpha*m)
     with alpha < 1/2 keeps an honest strict majority.
     """
@@ -99,17 +135,47 @@ def replica_specs(tree, worker_axes):
     return jax.tree.map(one, tree)
 
 
-def _aggregate(logits_r, rcfg: RobustDecodeConfig):
-    """[m, B, V] replica logits -> [B, V] robust aggregate (f32 wire)."""
-    kw = {}
-    if rcfg.aggregator == "vrmom":
-        kw["K"] = rcfg.K
-    elif rcfg.aggregator == "trimmed_mean":
-        # trim exactly the corrupted fraction per end; the default 0.1
-        # would trim int(0.1*m)=0 rows at m=8 and degrade to the mean.
-        kw["beta"] = rcfg.alpha
-    fn = AGG.get(rcfg.aggregator, **kw)
-    return fn(logits_r.astype(jnp.float32), axis=0)
+_NO_BATCH_DIM = -1  # mirrors cache._NO_SLOT_DIM: leaf has no batch dim
+
+
+def flatten_replicas(rep_tree, dims, m: int):
+    """Replica-stacked tree ``[m, ...]`` -> flat-batch tree (replica-major).
+
+    ``dims``: per-leaf batch-dim index of the *unstacked* tree (the
+    structural probe of ``serve.cache.slot_dims``). Each leaf's replica
+    axis merges into its batch axis — row ``r*B + b`` is replica r of
+    sequence b — so the m-replica forward is ONE model call at batch
+    ``m*B`` instead of a vmap over m separate calls: on a single host
+    that removes the per-replica loop XLA cannot always flatten, and on
+    a mesh the merged batch dim sharded over the worker axes places each
+    replica's rows on its own shard exactly like ``replica_specs`` does
+    for the stacked layout (batch axes == worker axes, DESIGN.md §6).
+
+    Batch-free leaves (e.g. per-layer scalar cache positions) are
+    replica-invariant by construction — ``stack_replicas`` broadcasts
+    them and honest replicas update them identically (attacks corrupt
+    the *logit wire*, never replica-local state) — so replica 0's value
+    is taken and re-broadcast on unflatten.
+    """
+    def one(x, d):
+        if d == _NO_BATCH_DIM:
+            return x[0]
+        xm = jnp.moveaxis(x, 0, d)  # replica axis lands before batch axis
+        return xm.reshape(xm.shape[:d] + (m * xm.shape[d + 1],)
+                          + xm.shape[d + 2:])
+
+    return jax.tree.map(one, rep_tree, dims)
+
+
+def unflatten_replicas(flat_tree, dims, m: int):
+    """Inverse of ``flatten_replicas``: restore the leading replica dim."""
+    def one(x, d):
+        if d == _NO_BATCH_DIM:
+            return jnp.broadcast_to(x[None], (m,) + x.shape)
+        xr = x.reshape(x.shape[:d] + (m, x.shape[d] // m) + x.shape[d + 1:])
+        return jnp.moveaxis(xr, d, 0)
+
+    return jax.tree.map(one, flat_tree, dims)
 
 
 def robust_logits(logits_r, rcfg: RobustDecodeConfig,
@@ -117,20 +183,20 @@ def robust_logits(logits_r, rcfg: RobustDecodeConfig,
     """Corrupt the attacked rows, then robustly aggregate.
 
     logits_r: [m, B, V] per-replica logits (the wire tensor). Returns
-    [B, V] f32 aggregated logits.
+    [B, V] f32 aggregated logits via the Estimator's fused backend.
     """
     if rcfg.attack != "none":
         if key is None:
             raise ValueError("attack injection needs a PRNG key")
         mask = replica_mask(rcfg.m, rcfg.alpha)
         logits_r = ATK.get(rcfg.attack)(key, logits_r, mask)
-    return _aggregate(logits_r, rcfg)
+    return rcfg.estimator.apply(logits_r.astype(jnp.float32), axis=0)
 
 
 def robust_decode_step(params, cfg, rep_caches, token,
                        rcfg: RobustDecodeConfig,
                        key: Optional[jax.Array] = None, window="cfg"):
-    """One replicated decode step.
+    """One replicated decode step (vmapped reference semantics).
 
     rep_caches: cache tree with leading replica dim [m, ...] (honest
     replicas hold identical state; a real deployment shards the dim over
@@ -138,6 +204,11 @@ def robust_decode_step(params, cfg, rep_caches, token,
     tokens go to every replica. ``window`` is forwarded to the model so
     the robust path uses the same cache geometry as the plain one.
     Returns ([B, V] f32 robust logits, updated rep_caches).
+
+    The engine's scanned decode loop runs the equivalent replica-FLAT
+    form instead (``flatten_replicas``: one ``decode_step`` at batch
+    m*B) — this vmapped version is the reference and the per-step
+    debugging baseline.
     """
     logits_r, new_caches = jax.vmap(
         lambda c: M.decode_step(params, cfg, c, token,

@@ -18,6 +18,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs.base import ArchConfig
 from ..core import attacks as atk
+from ..core.estimator import Estimator
 from ..dist import ctx as CTX
 from ..dist import robust_reduce as RR
 from ..dist import sharding as S
@@ -41,20 +42,21 @@ def make_train_step(
     cfg: ArchConfig,
     mesh,
     *,
-    aggregator: str = "vrmom",
+    estimator=Estimator(),  # Estimator spec or method name (coerced)
     mode: str = "stacked-rrs",  # stacked-rrs | stacked-auto | mean | inloop
-    K: int = 10,
     optimizer=None,
     lr: float = 1e-3,
     byzantine_frac: float = 0.0,
     attack: str = "gaussian",
     global_batch: Optional[int] = None,
-    use_pallas: bool = False,
     microbatch: Optional[int] = None,
 ) -> TrainSetup:
-    """``microbatch``: gradient-accumulation steps per worker (None = auto:
+    """``estimator``: a ``core.estimator.Estimator`` (or method name) —
+    the single aggregation spec threaded to every robust-reduction mode.
+    ``microbatch``: gradient-accumulation steps per worker (None = auto:
     one-sequence microbatches when seq_len >= 2048 — keeps remat-stored
     layer boundaries at one sequence/chip, see EXPERIMENTS.md §Perf)."""
+    est = Estimator.coerce(estimator)
     worker_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     n_workers = 1
     for a in worker_axes:
@@ -127,8 +129,7 @@ def make_train_step(
                   raise ValueError(
                       f"inloop microbatch={micro} must divide the "
                       f"per-worker batch {per_worker}")
-              with RR.robust_backward(mesh, worker_axes, method=aggregator,
-                                      K=K, use_pallas=use_pallas):
+              with RR.robust_backward(mesh, worker_axes, est):
                   if micro > 1:
                       # STRIDED split: every micro-slice must contain an
                       # equal worker-major block from each physical worker,
@@ -188,8 +189,7 @@ def make_train_step(
                   grads = jax.tree.map(
                       lambda g: attack_fn(key, g, mask), grads)
               agg = RR.aggregate(grads, mesh, worker_axes, mode=mode,
-                                 method=aggregator, K=K, use_pallas=use_pallas,
-                                 specs=stacked_specs)
+                                 est=est, specs=stacked_specs)
           agg = jax.lax.with_sharding_constraint(
               agg, S.to_named(mesh, params_specs))
           new_params, new_opt = optimizer.update(agg, opt_state, params)

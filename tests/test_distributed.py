@@ -39,7 +39,7 @@ grads = {
 sh = {"a": {"w_gate": NamedSharding(mesh, P("data", None, "model"))},
       "b": NamedSharding(mesh, P("data", None))}
 grads_p = jax.tree.map(jax.device_put, grads, sh)
-agg = jax.jit(lambda g: RR.aggregate_stacked_rrs(g, mesh, ("data",), "vrmom", K=10))(grads_p)
+agg = jax.jit(lambda g: RR.aggregate_stacked_rrs(g, mesh, ("data",), "vrmom"))(grads_p)
 want_a = kref.ref_vrmom(grads["a"]["w_gate"].reshape(4, -1), K=10).reshape(6, 16)
 # RRS flattens+concats all leaves then chunks by worker; per-coordinate
 # results must match the per-leaf reference exactly (coordinate-wise op).
@@ -68,7 +68,7 @@ cfg = get_arch("qwen3-1.7b").reduced()
 params = M.init(jax.random.PRNGKey(0), cfg)
 
 def run(mode, aggregator, byz):
-    setup = make_train_step(cfg, mesh, aggregator=aggregator, mode=mode,
+    setup = make_train_step(cfg, mesh, estimator=aggregator, mode=mode,
                             byzantine_frac=byz, attack="omniscient", lr=1e-2)
     opt = O.get(cfg.optimizer, lr=1e-2)
     p = jax.device_put(params, S.to_named(mesh, setup.params_specs))
@@ -110,8 +110,8 @@ mesh = jax.make_mesh((8, 1), ("data", "model"))
 g = {"w_up": jax.random.normal(jax.random.PRNGKey(2), (8, 12, 8))}
 sh = {"w_up": NamedSharding(mesh, P("data", None, "model"))}
 gp = jax.tree.map(jax.device_put, g, sh)
-a = jax.jit(lambda x: RR.aggregate_stacked_auto(x, "vrmom", 10))(gp)
-b = jax.jit(lambda x: RR.aggregate_stacked_rrs(x, mesh, ("data",), "vrmom", 10))(gp)
+a = jax.jit(lambda x: RR.aggregate_stacked_auto(x, "vrmom"))(gp)
+b = jax.jit(lambda x: RR.aggregate_stacked_rrs(x, mesh, ("data",), "vrmom"))(gp)
 np.testing.assert_allclose(np.asarray(a["w_up"]), np.asarray(b["w_up"]), rtol=2e-5, atol=2e-5)
 print("AUTO-EQ-RRS")
 """)
@@ -135,7 +135,7 @@ xs = jax.device_put(x, NamedSharding(mesh, P("data", None, None)))
 dys = jax.device_put(dy, NamedSharding(mesh, P("data", None, None)))
 
 def f(x, w):
-    with RR.robust_backward(mesh, ("data",), method="vrmom", K=10):
+    with RR.robust_backward(mesh, ("data",), "vrmom"):
         y = RR.robust_dot(x, w)
     return jnp.sum(y * dy)
 
@@ -175,7 +175,7 @@ g = {"w_up": jax.random.normal(jax.random.PRNGKey(0), (W, 8, 16))}
 sh = {"w_up": NamedSharding(mesh, P(("pod", "data"), None, "model"))}
 gp = jax.tree.map(jax.device_put, g, sh)
 agg = jax.jit(lambda x: RR.aggregate_stacked_rrs(
-    x, mesh, ("pod", "data"), "vrmom", 10))(gp)
+    x, mesh, ("pod", "data"), "vrmom"))(gp)
 want = kref.ref_vrmom(g["w_up"].reshape(W, -1), K=10).reshape(8, 16)
 np.testing.assert_allclose(np.asarray(agg["w_up"]), np.asarray(want),
                            rtol=2e-5, atol=2e-5)

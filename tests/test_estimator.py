@@ -1,0 +1,195 @@
+"""Unified Estimator layer: backend parity + spec validation.
+
+The acceptance contract of DESIGN.md §7: ``jnp``, ``ref`` and ``pallas``
+(interpret mode on CPU) must agree to 1e-5 for every supported method,
+across odd/even worker counts, flat ``[m, C]`` and batched ``[m, B, V]``
+stacks, and through the degenerate-scale VRMOM guard; whole-vector
+estimators must be rejected for coordinate-wise/chunked use at trace
+time rather than producing wrong shards.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.estimator import (BACKENDS, COORDINATEWISE_METHODS,
+                                  WHOLE_VECTOR_METHODS, Estimator)
+
+PARITY_BACKENDS = ("jnp", "ref", "pallas")
+
+
+def _spec(method, m):
+    kw = {}
+    if method == "trimmed_mean":
+        kw["beta"] = 0.2  # int(0.2*m) >= 1 for every m under test
+    if method == "vrmom":
+        kw["K"] = 8
+    return Estimator(method=method, interpret=True, **kw)
+
+
+def _rand(key, shape):
+    return 4.0 * jax.random.normal(key, shape, jnp.float32) + 1.5
+
+
+# ---------------------------------------------------------------------------
+# Backend parity (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [7, 8, 16, 33])  # odd and even worker counts
+@pytest.mark.parametrize("method", COORDINATEWISE_METHODS)
+def test_backend_parity_flat(method, m):
+    x = _rand(jax.random.PRNGKey(m), (m, 257))
+    outs = [np.asarray(_spec(method, m)._replace(backend=b).apply(x))
+            for b in PARITY_BACKENDS]
+    for got in outs[1:]:
+        np.testing.assert_allclose(got, outs[0], rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m", [5, 8])
+@pytest.mark.parametrize("method", COORDINATEWISE_METHODS)
+def test_backend_parity_batched_logits(method, m):
+    """[m, B, V] replica-logit stacks — the serve wire tensor."""
+    x = _rand(jax.random.PRNGKey(100 + m), (m, 4, 97))
+    outs = [np.asarray(_spec(method, m)._replace(backend=b).apply(x))
+            for b in PARITY_BACKENDS]
+    assert outs[0].shape == (4, 97)
+    for got in outs[1:]:
+        np.testing.assert_allclose(got, outs[0], rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", PARITY_BACKENDS)
+def test_vrmom_degenerate_scale_guard_all_backends(backend):
+    """Constant columns (MAD = 0) must return the exact median — no NaN,
+    no correction — on every backend; mixed constant/spread columns get
+    the guard per coordinate."""
+    est = Estimator(method="vrmom", backend=backend, interpret=True)
+    const = jnp.full((8, 33), -3.25, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(est.apply(const)),
+                                  np.full((33,), -3.25, np.float32))
+    spread = _rand(jax.random.PRNGKey(0), (8,))
+    x = jnp.stack([jnp.full((8,), 2.0), spread], axis=1)
+    out = np.asarray(est.apply(x))
+    assert np.all(np.isfinite(out))
+    assert out[0] == np.float32(2.0)
+    want = Estimator(method="vrmom", backend="jnp").apply(spread[:, None])
+    np.testing.assert_allclose(out[1], np.asarray(want)[0], rtol=1e-5)
+
+
+def test_auto_backend_resolution():
+    assert Estimator(method="vrmom").resolve_backend() == "pallas"
+    assert Estimator(method="trimmed_mean").resolve_backend() == "pallas"
+    assert Estimator(method="mean").resolve_backend() == "ref"  # no sort
+    assert Estimator(method="krum").resolve_backend() == "jnp"
+    assert Estimator(method="median", backend="ref").resolve_backend() == "ref"
+
+
+def test_estimator_is_jit_static():
+    """Specs are hashable NamedTuples: usable as jit static args."""
+    agg_static = jax.jit(lambda x, est: est.apply(x), static_argnums=1)
+    x = _rand(jax.random.PRNGKey(2), (8, 64))
+    e = Estimator(method="median", interpret=True)
+    np.testing.assert_allclose(np.asarray(agg_static(x, e)),
+                               np.asarray(jnp.median(x, axis=0)),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Spec validation (satellite: beta vs m; whole-vector rejection)
+# ---------------------------------------------------------------------------
+
+def test_trimmed_mean_beta_validated_at_trace_time():
+    x = jnp.ones((8, 4))
+    with pytest.raises(ValueError, match="degrades to the mean"):
+        Estimator(method="trimmed_mean", beta=0.1).apply(x)
+    # the same spec is fine at m=16 (int(0.1*16) = 1)
+    Estimator(method="trimmed_mean", beta=0.1, interpret=True).apply(
+        jnp.ones((16, 4)))
+    with pytest.raises(ValueError, match="nothing left"):
+        Estimator(method="trimmed_mean", beta=0.5).validate(8)
+
+
+@pytest.mark.parametrize("method", WHOLE_VECTOR_METHODS)
+def test_whole_vector_rejected_for_chunked_use(method):
+    est = Estimator(method=method)
+    with pytest.raises(ValueError, match="whole-vector"):
+        est.require_coordinatewise()
+    for backend in ("ref", "pallas"):
+        with pytest.raises(ValueError, match="whole-vector"):
+            est._replace(backend=backend).apply(jnp.ones((8, 4)))
+
+
+@pytest.mark.parametrize("method", WHOLE_VECTOR_METHODS)
+def test_whole_vector_rejected_by_rrs_and_serve(method):
+    """The RRS wire format and the replica-logit aggregation both refuse
+    whole-vector estimators with a clear error instead of producing
+    wrong shards (DESIGN.md §7)."""
+    from repro.dist import robust_reduce as RR
+    from repro.serve.robust import RobustDecodeConfig
+
+    g = {"w": jnp.ones((4, 8))}
+    with pytest.raises(ValueError, match="whole-vector"):
+        RR.aggregate_stacked_auto(g, method)
+    with pytest.raises(ValueError, match="whole-vector"):
+        RobustDecodeConfig(m=8, estimator=method)
+
+
+def test_whole_vector_still_usable_unchunked():
+    """On a full stacked vector (the statistical path) the whole-vector
+    estimators remain first-class via the jnp backend."""
+    x = _rand(jax.random.PRNGKey(3), (9, 40))
+    for method in WHOLE_VECTOR_METHODS:
+        out = Estimator(method=method, n_byzantine=2).apply(x)
+        assert out.shape == (40,)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_robust_decode_config_coercion():
+    from repro.serve.robust import RobustDecodeConfig
+
+    r = RobustDecodeConfig(m=8, estimator="trimmed_mean", alpha=0.25)
+    assert isinstance(r.estimator, Estimator)
+    assert r.estimator.beta == 0.25  # bound to alpha, not the 0.1 default
+    r2 = RobustDecodeConfig(m=8, estimator="vrmom", K=4)
+    assert r2.estimator.K == 4
+    explicit = Estimator(method="median")
+    assert RobustDecodeConfig(m=8, estimator=explicit).estimator is explicit
+    with pytest.raises(ValueError, match="degrades to the mean"):
+        RobustDecodeConfig(m=8, estimator=Estimator(method="trimmed_mean",
+                                                    beta=0.1))
+
+
+def test_unknown_method_and_backend():
+    with pytest.raises(ValueError, match="unknown estimator method"):
+        Estimator(method="winsorized").apply(jnp.ones((4, 4)))
+    with pytest.raises(ValueError, match="unknown backend"):
+        Estimator(backend="tpu").apply(jnp.ones((4, 4)))
+    with pytest.raises(TypeError):
+        Estimator.coerce(42)
+
+
+def test_coerce_passthrough_and_defaults():
+    e = Estimator(method="median", backend="ref")
+    assert Estimator.coerce(e) is e
+    c = Estimator.coerce("vrmom", K=3)
+    assert (c.method, c.K) == ("vrmom", 3)
+
+
+# ---------------------------------------------------------------------------
+# Non-zero axis + dtype behavior
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", PARITY_BACKENDS)
+def test_apply_nonzero_axis(backend):
+    x = _rand(jax.random.PRNGKey(4), (3, 8, 5))
+    est = Estimator(method="median", backend=backend, interpret=True)
+    out = est.apply(x, axis=1)
+    want = jnp.median(x, axis=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", ("ref", "pallas"))
+def test_fused_backends_preserve_dtype(backend):
+    x = _rand(jax.random.PRNGKey(5), (8, 64)).astype(jnp.bfloat16)
+    out = Estimator(method="vrmom", backend=backend, interpret=True).apply(x)
+    assert out.dtype == jnp.bfloat16

@@ -5,8 +5,9 @@ import numpy as np
 import pytest
 
 from repro.core import vrmom as V
-from repro.kernels import ops, ref
-from repro.kernels.vrmom import mom_pallas, vrmom_pallas
+from repro.kernels import ref
+from repro.kernels.vrmom import (aggregate_pallas, mom_pallas,
+                                 trimmed_mean_pallas, vrmom_pallas)
 
 
 def _rand(key, m, c, dtype):
@@ -60,10 +61,30 @@ def test_ref_matches_core_estimator():
 
 def test_kernel_nd_input():
     x = _rand(jax.random.PRNGKey(4), 16, 6 * 9, jnp.float32).reshape(16, 6, 9)
-    got = ops.robust_aggregate(x, "vrmom", interpret=True)
+    got = aggregate_pallas(x, "vrmom", interpret=True)
     want = ref.ref_vrmom(x.reshape(16, -1)).reshape(6, 9)
     assert got.shape == (6, 9)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+@pytest.mark.parametrize("m,c", [(8, 64), (17, 513), (32, 1000)])
+@pytest.mark.parametrize("beta", [0.15, 0.25])
+def test_trimmed_mean_kernel_matches_ref(m, c, beta):
+    """The trim rides the same sorting network: static slice of the
+    sorted block must equal the jnp sort-and-slice oracle."""
+    x = _rand(jax.random.PRNGKey(m + c), m, c, jnp.float32)
+    got = trimmed_mean_pallas(x, beta=beta, interpret=True)
+    want = ref.ref_trimmed_mean(x, beta=beta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("m,c", [(3, 7), (8, 64), (33, 2048)])
+def test_mean_kernel_matches_ref(m, c):
+    x = _rand(jax.random.PRNGKey(m * 7 + c), m, c, jnp.float32)
+    got = aggregate_pallas(x, "mean", interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.ref_mean(x)),
+                               rtol=2e-6, atol=2e-6)
 
 
 def test_kernel_byzantine_bounded():

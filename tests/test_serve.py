@@ -219,7 +219,7 @@ def test_robust_decode_token_identical_under_attack(dense, attack,
     kw = dict(K=8) if aggregator == "vrmom" else {}
     reng = ServeEngine(cfg, params, max_len=40,
                        robust=RobustDecodeConfig(
-                           m=8, aggregator=aggregator, attack=attack,
+                           m=8, estimator=aggregator, attack=attack,
                            alpha=0.25, **kw))
     robust = reng.generate(batch, 10, key=jax.random.PRNGKey(11))
     np.testing.assert_array_equal(np.asarray(robust), np.asarray(plain))
@@ -233,11 +233,51 @@ def test_mean_aggregation_breaks_under_attack(dense):
     batch = _prompt_batch(cfg, B=2, S=12)
     plain = ServeEngine(cfg, params, max_len=40).generate(batch, 10)
     meng = ServeEngine(cfg, params, max_len=40,
-                       robust=RobustDecodeConfig(m=8, aggregator="mean",
+                       robust=RobustDecodeConfig(m=8, estimator="mean",
                                                  attack="omniscient",
                                                  alpha=0.25))
     mean_toks = meng.generate(batch, 10, key=jax.random.PRNGKey(11))
     assert not bool(jnp.all(mean_toks == plain))
+
+
+def test_robust_pool_decode_token_identical_under_attack(dense):
+    """Continuous batching + replicated decode: the pool path flattens
+    replicas into the slot dim per decode block (and restores them for
+    admit/evict) — completions must still match plain solo decode under
+    attack, across mid-decode admissions."""
+    cfg, params = dense
+    plain = ServeEngine(cfg, params, max_len=64, n_slots=2)
+    reng = ServeEngine(cfg, params, max_len=64, n_slots=2,
+                       robust=RobustDecodeConfig(m=4, estimator="vrmom", K=8,
+                                                 attack="signflip",
+                                                 alpha=0.25))
+    sched = Scheduler(reng, decode_block=3)
+    rs = np.random.RandomState(7)
+    reqs = [Request(tokens=rs.randint(0, cfg.vocab, size=(5 + 2 * i,)),
+                    max_new_tokens=6) for i in range(3)]
+    uids = [sched.submit(r) for r in reqs]
+    done = sched.run()
+    assert sorted(done) == sorted(uids)
+    for u, r in zip(uids, reqs):
+        solo = plain.generate({"tokens": jnp.asarray(r.tokens)[None]}, 6)
+        assert done[u].tokens == list(map(int, solo[0]))
+
+
+def test_flatten_unflatten_replicas_roundtrip(dense):
+    """flatten_replicas is a bijection on replica-stacked cache trees."""
+    from repro.serve.robust import (flatten_replicas, stack_replicas,
+                                    unflatten_replicas)
+    from repro.serve import cache as C
+
+    cfg, params = dense
+    eng = ServeEngine(cfg, params, max_len=32, n_slots=3)
+    dims = C.slot_dims(eng._pool_caches)
+    caches = eng._pool_caches(3)
+    rep = stack_replicas(caches, 4)
+    flat = flatten_replicas(rep, dims, 4)
+    back = unflatten_replicas(flat, dims, 4)
+    for a, b in zip(jax.tree.leaves(rep), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_robust_logits_exactness():
@@ -246,7 +286,7 @@ def test_robust_logits_exactness():
     key = jax.random.PRNGKey(0)
     honest = jax.random.normal(key, (3, 32))
     stacked = jnp.broadcast_to(honest[None], (8,) + honest.shape)
-    rcfg = RobustDecodeConfig(m=8, aggregator="vrmom", K=8,
+    rcfg = RobustDecodeConfig(m=8, estimator="vrmom", K=8,
                               attack="gaussian", alpha=0.25)
     agg = robust_logits(stacked, rcfg, key=jax.random.PRNGKey(1))
     np.testing.assert_array_equal(np.asarray(agg), np.asarray(honest))

@@ -8,6 +8,7 @@ import pytest
 
 from repro.core import vrmom as V
 from repro.core import aggregators, attacks
+from repro.core.estimator import Estimator
 
 
 def test_sigma_k_sq_matches_theory():
@@ -118,7 +119,7 @@ def test_aggregators_registry_shapes():
     x = jax.random.normal(key, (12, 6))
     for name in aggregators.REGISTRY:
         kw = {"n_byzantine": 2} if name == "krum" else {}
-        out = aggregators.get(name, **kw)(x)
+        out = Estimator(method=name, **kw).apply(x)
         assert out.shape == (6,), name
         assert bool(jnp.all(jnp.isfinite(out))), name
 
@@ -127,6 +128,14 @@ def test_trimmed_mean_robust():
     x = jnp.concatenate([jnp.ones((18, 4)), 1e6 * jnp.ones((2, 4))])
     out = aggregators.trimmed_mean(x, beta=0.15)
     np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-6)
+
+
+def test_trimmed_mean_zero_trim_warns():
+    """int(beta*m)==0 degrades to the mean — the function must warn
+    (the Estimator spec upgrades this to a trace-time error)."""
+    x = jnp.ones((8, 4))
+    with pytest.warns(RuntimeWarning, match="0 rows"):
+        aggregators.trimmed_mean(x, beta=0.1)
 
 
 def test_theorem4_multivariate_normality_covariance():
