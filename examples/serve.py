@@ -115,6 +115,9 @@ def main():
     ap.add_argument("--attack", default="none",
                     help="fault injection: none|signflip|gaussian|...")
     ap.add_argument("--alpha", type=float, default=0.25)
+    ap.add_argument("--attn-backend", default=None,
+                    choices=("auto", "jnp", "flash"),
+                    help="attention backend override (DESIGN.md §8)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced()
@@ -138,7 +141,7 @@ def main():
 
     max_len = args.prompt_len + 2 * args.requests + args.tokens + 8
     engine = ServeEngine(cfg, params, max_len=max_len, n_slots=args.slots,
-                         robust=robust)
+                         robust=robust, attn_backend=args.attn_backend)
     if args.scheduler:
         run_scheduler(engine, cfg, args, sampling)
     else:

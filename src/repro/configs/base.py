@@ -72,6 +72,10 @@ class ArchConfig:
     param_dtype: str = "bfloat16"
     compute_dtype: str = "bfloat16"
     attn_chunk: int = 1024  # query-block size for chunked attention
+    # attention execution backend (models/attn_backend.py, DESIGN.md §8):
+    # "auto" | "jnp" (chunked mha reference) | "flash" (fused Pallas
+    # kernels: full-seq flash + grouped-GQA decode)
+    attn_backend: str = "auto"
     loss_chunk: int = 1024  # sequence-chunked cross-entropy
     remat: bool = True
     remat_block: int = 1  # >1: two-level remat, store every Nth boundary

@@ -1,9 +1,11 @@
-"""Pallas TPU kernels for the paper's aggregation hot-spot.
+"""Pallas TPU kernels: robust aggregation + attention.
 
-Execution entry points only — dispatch policy (method/backend selection)
-is ``repro.core.estimator.Estimator``, the single aggregation dispatch
-site (DESIGN.md §7).
+Execution entry points only — dispatch policy lives one layer up:
+``repro.core.estimator.Estimator`` for aggregation (DESIGN.md §7) and
+``repro.models.attn_backend`` for attention (DESIGN.md §8).
 """
 from . import ref
+from .decode_attention import decode_attention
+from .flash_attention import flash_attention
 from .vrmom import (aggregate_pallas, mean_pallas, mom_pallas,
                     trimmed_mean_pallas, vrmom_pallas)

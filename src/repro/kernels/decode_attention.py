@@ -1,0 +1,238 @@
+"""Fused single-query (decode) attention Pallas kernel, GQA-grouped.
+
+The serving hot loop is one query token per sequence attending over the
+KV cache. The chunked jnp ``mha`` pays two avoidable memory costs per
+decode step: a ``jnp.repeat`` of K/V from Hkv to H heads (4x cache read
+traffic at the 4:1 GQA ratios of the assigned archs) and a materialized
+f32 ``[B, H, 1, T]`` score tensor. This kernel does neither: GQA is
+computed *grouped* — each K/V block is loaded into VMEM once per kv
+head and shared by the whole [G = H/Hkv, dh] query group — and the
+online-softmax state (m, l, acc) lives in VMEM scratch, so scores never
+touch HBM.
+
+Two layouts of the same online-softmax math (DESIGN.md §8):
+
+* **narrow** (compiled TPU): grid ``(B, Hkv, n_kv_blocks)``, kv axis
+  innermost (sequential, accumulating into scratch; the output block is
+  written on the last kv step). Blocks are 2-D MXU-shaped: q ``[G,
+  dh]``, K/V ``[blk_k, dh]``. K/V are viewed as ``[B, T, Hkv*dh]`` — a
+  free reshape of the serving cache layout ``[B, T, Hkv, dh]`` — so the
+  per-kv-head slab is a plain block of the last two dims (lane-aligned
+  for dh in {64, 128}) with no transpose of the cache.
+* **wide** (interpret mode, host CPU): grid ``(n_kv_blocks,)`` with the
+  whole ``[B, Hkv, G, dh]`` query block and ``[B, blk_k, Hkv*dh]`` K/V
+  blocks resident at once, grouped einsums over the head axes. One grid
+  step per ``INTERPRET_BLK_K`` keys amortizes the per-step interpreter
+  overhead (à la ``vrmom.INTERPRET_TILE``), which is what lets the
+  kernel beat the chunked jnp ``mha`` at serving shapes on host CPU too
+  (``BENCH_attn.json``).
+
+Validity masking is per row: ``kv_len`` may be a scalar (classic batched
+decode) or a per-row ``[B]`` vector (the slot-cache serving path,
+DESIGN.md §6, where every slot sits at its own fill level). The
+ring-buffer window cache needs no extra support: decode-with-window
+masks by validity only (``kv_len = min(pos+1, T)``, slot order is
+irrelevant to softmax — DESIGN.md §6), and tile padding beyond T rides
+the same mask. Dispatch policy (which model layers run this vs the
+chunked jnp ``mha``) lives in ``models/attn_backend.py``; this module is
+the execution entry point.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+DEFAULT_BLK_K = 256     # compiled TPU path: [blk_k, dh] K/V blocks in VMEM
+INTERPRET_BLK_K = 4096  # interpret mode: amortize per-grid-step overhead
+
+__all__ = ["decode_attention", "DEFAULT_BLK_K", "INTERPRET_BLK_K"]
+
+
+def _online_update(s, pv, m_scr, l_scr, acc_scr):
+    """One online-softmax accumulation step, shape-generic.
+
+    s: scores [..., blk_k]; ``pv(p)`` contracts the probabilities with
+    the value block to acc's shape [..., dh]. Scratch m/l are [...],
+    acc is [..., dh].
+    """
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    alpha = jnp.exp(m_prev - m_new)
+    m_scr[...] = m_new
+    l_scr[...] = l_prev * alpha + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[..., None] + pv(p)
+
+
+def _kernel_narrow(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, scale, blk_k, n_k):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [G, dh] — the whole query group
+    k = k_ref[0].astype(jnp.float32)     # [blk_k, dh] — loaded ONCE per
+    v = v_ref[0].astype(jnp.float32)     # kv head, shared by all G rows
+    s = jnp.dot(q * scale, k.T, preferred_element_type=jnp.float32)
+
+    kv_len = len_ref[0, 0]
+    k_pos = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(k_pos < kv_len, s, NEG_INF)
+    _online_update(
+        s, lambda p: jnp.dot(p, v, preferred_element_type=jnp.float32),
+        m_scr, l_scr, acc_scr)
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def _kernel_wide(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                 acc_scr, *, scale, blk_k, n_k):
+    ki = pl.program_id(0)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    B, Hkv, G, dh = q_ref.shape
+    q = q_ref[...].astype(jnp.float32)                       # [B,Hkv,G,dh]
+    k = k_ref[...].astype(jnp.float32).reshape(B, blk_k, Hkv, dh)
+    v = v_ref[...].astype(jnp.float32).reshape(B, blk_k, Hkv, dh)
+    s = jnp.einsum("bhgd,bthd->bhgt", q * scale, k,
+                   preferred_element_type=jnp.float32)       # [B,Hkv,G,blk]
+
+    kv_len = len_ref[...]                                    # [B, 1]
+    k_pos = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 3)
+    s = jnp.where(k_pos < kv_len[:, 0][:, None, None, None], s, NEG_INF)
+    _online_update(
+        s, lambda p: jnp.einsum("bhgt,bthd->bhgd", p, v,
+                                preferred_element_type=jnp.float32),
+        m_scr, l_scr, acc_scr)
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("blk_k", "interpret"))
+def _decode_grouped(q, k, v, lens, blk_k, interpret):
+    """q: [B, Hkv, G, dh]; k/v: [B, T, Hkv, dh]; lens: [B] int32."""
+    B, Hkv, G, dh = q.shape
+    T = k.shape[1]
+    blk_k = min(blk_k, T)
+    pad_k = (-T) % blk_k
+    if pad_k:
+        # padded slots fall beyond kv_len <= T: masked out in-kernel
+        padw = ((0, 0), (0, pad_k), (0, 0), (0, 0))
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+    Tk = T + pad_k
+    n_k = Tk // blk_k
+    # Free reshape: the per-kv-head [blk_k, dh] slab becomes a plain
+    # block of the last two dims — the cache is never transposed.
+    k2 = k.reshape(B, Tk, Hkv * dh)
+    v2 = v.reshape(B, Tk, Hkv * dh)
+    lens2 = lens[:, None]
+    scale = 1.0 / (dh ** 0.5)
+
+    if interpret:
+        # wide layout: whole [B, Hkv, G, dh] block per grid step
+        kernel = functools.partial(_kernel_wide, scale=scale, blk_k=blk_k,
+                                   n_k=n_k)
+        grid = (n_k,)
+        in_specs = [
+            pl.BlockSpec((B, 1), lambda j: (0, 0)),
+            pl.BlockSpec((B, Hkv, G, dh), lambda j: (0, 0, 0, 0)),
+            pl.BlockSpec((B, blk_k, Hkv * dh), lambda j: (0, j, 0)),
+            pl.BlockSpec((B, blk_k, Hkv * dh), lambda j: (0, j, 0)),
+        ]
+        out_specs = pl.BlockSpec((B, Hkv, G, dh), lambda j: (0, 0, 0, 0))
+        scratch = [
+            pltpu.VMEM((B, Hkv, G), jnp.float32),
+            pltpu.VMEM((B, Hkv, G), jnp.float32),
+            pltpu.VMEM((B, Hkv, G, dh), jnp.float32),
+        ]
+    else:
+        # narrow layout: 2-D MXU-shaped blocks, kv axis sequential
+        kernel = functools.partial(_kernel_narrow, scale=scale, blk_k=blk_k,
+                                   n_k=n_k)
+        grid = (B, Hkv, n_k)
+        in_specs = [
+            pl.BlockSpec((1, 1), lambda b, h, j: (b, 0)),
+            pl.BlockSpec((1, 1, G, dh), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, blk_k, dh), lambda b, h, j: (b, j, h)),
+            pl.BlockSpec((1, blk_k, dh), lambda b, h, j: (b, j, h)),
+        ]
+        out_specs = pl.BlockSpec((1, 1, G, dh), lambda b, h, j: (b, h, 0, 0))
+        scratch = [
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, dh), jnp.float32),
+        ]
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, dh), q.dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(lens2, q, k2, v2)
+
+
+def _default_interpret():
+    return jax.default_backend() != "tpu"
+
+
+def decode_attention(q, k, v, *, kv_len=None, blk_k=None, interpret=None):
+    """Fused single-query attention over a KV cache.
+
+    q: [B, 1, H, dh]; k/v: [B, T, Hkv, dh] with H divisible by Hkv
+    (grouped in-kernel — K/V are never repeated to H). ``kv_len``:
+    valid cache length — None (whole cache), a scalar, or a per-row [B]
+    vector (slot-cache serving). Returns [B, 1, H, dh] in q's dtype
+    (f32 softmax/accumulation internally).
+
+    ``blk_k=None`` picks the kv tile per mode: a VMEM-sized block when
+    compiled, a wide block when interpreted (per-grid-step interpreter
+    overhead dominates otherwise — ``BENCH_attn.json``).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    if blk_k is None:
+        blk_k = INTERPRET_BLK_K if interpret else DEFAULT_BLK_K
+    B, S, H, dh = q.shape
+    if S != 1:
+        raise ValueError(f"decode_attention is single-query; got S={S}")
+    T, Hkv = k.shape[1], k.shape[2]
+    if H % Hkv:
+        raise ValueError(f"H={H} not divisible by Hkv={Hkv}")
+    G = H // Hkv
+    # query head h belongs to kv head h // G — the same grouping
+    # jnp.repeat(k, G, axis=2) realizes — so the reshape is exact.
+    qg = q[:, 0].reshape(B, Hkv, G, dh)
+    if kv_len is None:
+        lens = jnp.full((B,), T, jnp.int32)
+    else:
+        kv_len = jnp.asarray(kv_len, jnp.int32)
+        lens = jnp.broadcast_to(kv_len, (B,))
+    lens = jnp.minimum(lens, T)
+    out = _decode_grouped(qg, k, v, lens, int(blk_k), bool(interpret))
+    return out.reshape(B, 1, H, dh)

@@ -27,7 +27,7 @@ NEG_INF = -1e30
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            scale, causal, blk_q, blk_k, n_k):
+            scale, causal, blk_q, blk_k, n_k, t_valid):
     ki = pl.program_id(2)
     qi = pl.program_id(1)
 
@@ -42,10 +42,17 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     v = v_ref[0].astype(jnp.float32)
     s = jnp.dot(q, k.T) * scale  # [blk_q, blk_k] f32
 
+    if causal or t_valid % blk_k:
+        k_pos = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     if causal:
         q_pos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-        k_pos = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+    if t_valid % blk_k:
+        # key-validity mask: T (static) isn't tile-divisible, so the
+        # last kv block carries zero-padded keys — mask them regardless
+        # of causality (the non-causal pad_k case used to silently fall
+        # back to the jnp reference; now it's in-kernel).
+        s = jnp.where(k_pos < t_valid, s, NEG_INF)
 
     m_prev = m_scr[...]
     l_prev = l_scr[...]
@@ -77,10 +84,9 @@ def _flash_bh(q, k, v, causal, blk_q, blk_k, interpret):
     if pad_q:
         q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
     if pad_k:
-        # padded keys masked out via causal/NEG_INF? non-causal needs an
-        # explicit mask: pad with a huge negative bias trick instead —
-        # simplest correct approach: pad k with zeros and rely on the
-        # validity mask below.
+        # zero-padded keys are excluded by the in-kernel validity mask
+        # (t_valid = T is static, so the mask costs one compare on the
+        # last kv block only)
         k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
     Sq, Tk = S + pad_q, T + pad_k
@@ -88,15 +94,8 @@ def _flash_bh(q, k, v, causal, blk_q, blk_k, interpret):
     scale = 1.0 / (dh ** 0.5)
 
     kernel = functools.partial(
-        _kernel, scale=scale, causal=causal or pad_k > 0, blk_q=blk_q,
-        blk_k=blk_k, n_k=n_k)
-    # note: for the pad_k-only case we still use the positional mask to
-    # exclude padded keys (causal=True with q_pos >= T-1 keeps them out
-    # only when causal; for pure non-causal pads we fall back below).
-    if pad_k and not causal:
-        # non-causal with padding: mask via explicit validity not
-        # supported in-kernel; compute unpadded reference path instead.
-        return None
+        _kernel, scale=scale, causal=causal, blk_q=blk_q,
+        blk_k=blk_k, n_k=n_k, t_valid=T)
 
     out = pl.pallas_call(
         kernel,
@@ -123,11 +122,11 @@ def flash_attention(q, k, v, *, causal=True, blk_q=256, blk_k=256,
     """q: [B, S, H, dh]; k/v: [B, T, Hkv, dh] -> [B, S, H, dh].
 
     GQA handled by repeating kv to H (head axis folded into the grid).
-    Falls back to the jnp reference when the shape can't be expressed
-    (non-causal with non-divisible T).
+    Every shape is expressed in-kernel — non-divisible T (causal or
+    not) is covered by the static key-validity mask, so there is no
+    reference fallback. Dispatch policy (which model layers run this
+    vs the chunked jnp ``mha``) lives in ``models/attn_backend.py``.
     """
-    from . import ref as _ref
-
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     B, S, H, dh = q.shape
@@ -139,6 +138,4 @@ def flash_attention(q, k, v, *, causal=True, blk_q=256, blk_k=256,
     kf = jnp.moveaxis(k, 2, 1).reshape(B * H, T, dh)
     vf = jnp.moveaxis(v, 2, 1).reshape(B * H, T, dh)
     out = _flash_bh(qf, kf, vf, causal, blk_q, blk_k, bool(interpret))
-    if out is None:
-        return _ref.ref_attention(q, k, v, causal=causal)
     return jnp.moveaxis(out.reshape(B, H, S, dh), 1, 2)

@@ -6,6 +6,15 @@ the live buffer at [B, Hkv, Hq/Hkv, blk, T]. GQA is computed grouped
 (no repeat of K/V). Sliding-window masking supports Mixtral-style SWA
 and the long_500k dense variant; decode uses a ring-buffer cache when a
 window is set.
+
+Execution is backend-dispatched (DESIGN.md §8): ``attn_forward`` and
+``attn_decode``/``cross_attn_decode`` route through
+``models/attn_backend.py``, which sends supported signatures to the
+fused Pallas kernels (``kernels/flash_attention`` full-sequence,
+``kernels/decode_attention`` single-query grouped-GQA decode) per
+``cfg.attn_backend``; the chunked ``mha`` below is the jnp reference
+backend and the only implementation of sliding-window masking and the
+TP head-padded layout.
 """
 from __future__ import annotations
 
@@ -48,6 +57,15 @@ def _proj(x, w3):
 
     D, H, dh = w3.shape
     return _dot(x, w3.reshape(D, H * dh)).reshape(x.shape[:-1] + (H, dh))
+
+
+def _out_proj(out, wo):
+    """[B,S,H,dh] @ [H,dh,D] via the IB-RRS/TP-aware 2-D dot — decode
+    shares the sharding/robust-backward contract of ``attn_forward``."""
+    from .layers import _dot
+
+    H, dh, D = wo.shape
+    return _dot(out.reshape(out.shape[:2] + (H * dh,)), wo.reshape(H * dh, D))
 
 
 def _qkv(p, x, cfg, positions, kv_x=None):
@@ -151,12 +169,12 @@ def attn_forward(p, x, cfg, *, positions, causal=True, window="cfg",
     Returns (out [B,S,D], cache or None). ``window`` overrides
     cfg.sliding_window when given explicitly.
     """
+    from . import attn_backend as AB
+
     window = cfg.sliding_window if window == "cfg" else window
     q, k, v = _qkv(p, x, cfg, positions, kv_x=kv_x)
-    out = mha(q, k, v, causal=causal, window=window, chunk=cfg.attn_chunk)
-    from .layers import _dot
-    H, dh, D = p["wo"].shape
-    out = _dot(out.reshape(out.shape[:2] + (H * dh,)), p["wo"].reshape(H * dh, D))
+    out = AB.full_attention(q, k, v, cfg, causal=causal, window=window)
+    out = _out_proj(out, p["wo"])
     cache = None
     if make_cache:
         S = k.shape[1]
@@ -225,19 +243,22 @@ def attn_decode(p, x1, cfg, cache: KVCache, *, window="cfg"):
     # positions don't matter for masking beyond validity (window == ring
     # size). Linear cache: the first pos+1 slots are valid.
     kv_len = jnp.minimum(pos + 1, T) if window else pos + 1
-    out = mha(q, ck, cv, causal=False, window=None, chunk=1,
-              q_offset=0, kv_len=kv_len)
-    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    from . import attn_backend as AB
+
+    out = AB.decode_attention(q, ck, cv, cfg, kv_len=kv_len)
+    out = _out_proj(out, p["wo"])
     return out, KVCache(k=ck, v=cv, pos=pos + 1)
 
 
 def cross_attn_decode(p, x1, cfg, cross_kv: KVCache):
     """Decode-time cross attention over a fixed encoder cache."""
-    q = jnp.einsum("bsd,dhk->bshk", x1, p["wq"])
+    from . import attn_backend as AB
+
+    q = _proj(x1, p["wq"])
     if cfg.qk_norm:
         q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
-    out = mha(q, cross_kv.k, cross_kv.v, causal=False, window=None, chunk=1)
-    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    out = AB.decode_attention(q, cross_kv.k, cross_kv.v, cfg)
+    return _out_proj(out, p["wo"])
 
 
 def make_cross_cache(p, enc_out, cfg):

@@ -68,10 +68,25 @@ class ServeEngine:
               number of queued requests.
     robust:   optional ``RobustDecodeConfig`` — decode replicated over
               ``robust.m`` replicas with robust logit aggregation.
+    attn_backend: optional override of ``cfg.attn_backend`` (DESIGN.md
+              §8) — carried on the config, so every jitted step
+              (prefill, scanned decode, the replica-flat robust loop)
+              inherits it and the fused decode-attention kernel runs
+              inside the same scan as the fused aggregation kernel.
     """
 
     def __init__(self, cfg, params, *, max_len: int, n_slots: int = 4,
-                 window="cfg", robust: Optional[R.RobustDecodeConfig] = None):
+                 window="cfg", robust: Optional[R.RobustDecodeConfig] = None,
+                 attn_backend: Optional[str] = None):
+        if attn_backend is not None:
+            import dataclasses
+
+            from ..models.attn_backend import BACKENDS
+
+            if attn_backend not in BACKENDS:
+                raise ValueError(f"unknown attn backend {attn_backend!r}; "
+                                 f"known: {BACKENDS}")
+            cfg = dataclasses.replace(cfg, attn_backend=attn_backend)
         self.cfg = cfg
         self.params = params
         self.max_len = int(max_len)

@@ -121,6 +121,24 @@ def test_flash_attention_matches_ref(S, H, Hkv, dh, blk, causal):
                                rtol=3e-5, atol=3e-5)
 
 
+@pytest.mark.parametrize("S,T", [(64, 100), (33, 47), (16, 1500)])
+def test_flash_attention_noncausal_padded_keys(S, T):
+    """Non-causal with tile-indivisible T (the cross-attention shape,
+    e.g. whisper's F=1500 encoder cache): the static in-kernel
+    key-validity mask must cover the padded kv block — this used to
+    silently fall back to the jnp reference instead of running the
+    kernel."""
+    B, H, dh = 2, 4, 32
+    q = jax.random.normal(jax.random.PRNGKey(S), (B, S, H, dh))
+    k = jax.random.normal(jax.random.PRNGKey(T), (B, T, H, dh))
+    v = jax.random.normal(jax.random.PRNGKey(S + T), (B, T, H, dh))
+    got = flash_attention(q, k, v, causal=False, blk_q=32, blk_k=32,
+                          interpret=True)
+    want = ref.ref_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
 def test_flash_attention_bf16():
     key = jax.random.PRNGKey(9)
     q = jax.random.normal(key, (1, 64, 2, 64), jnp.bfloat16)

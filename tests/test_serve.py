@@ -225,6 +225,23 @@ def test_robust_decode_token_identical_under_attack(dense, attack,
     np.testing.assert_array_equal(np.asarray(robust), np.asarray(plain))
 
 
+def test_robust_flash_backend_token_identical_under_attack(dense):
+    """Fused end-to-end decode (kernel attention + kernel aggregation,
+    DESIGN.md §8): attn_backend='flash' with m=8 replicated decode under
+    signflip must still be token-identical to plain single-replica
+    decode — the backend changes execution, never tokens."""
+    cfg, params = dense
+    batch = _prompt_batch(cfg, B=2, S=12)
+    plain = ServeEngine(cfg, params, max_len=40,
+                        attn_backend="jnp").generate(batch, 10)
+    reng = ServeEngine(cfg, params, max_len=40, attn_backend="flash",
+                       robust=RobustDecodeConfig(m=8, estimator="vrmom", K=8,
+                                                 attack="signflip",
+                                                 alpha=0.25))
+    robust = reng.generate(batch, 10, key=jax.random.PRNGKey(11))
+    np.testing.assert_array_equal(np.asarray(robust), np.asarray(plain))
+
+
 def test_mean_aggregation_breaks_under_attack(dense):
     """Control: non-robust mean aggregation is corrupted by an attack
     the robust aggregators survive (omniscient: the corrupted rows drag
