@@ -4,10 +4,14 @@ Table 1: effect of K on VRMOM RMSE          (Section 4.1.1)
 Table 2: VRMOM vs MOM RMSE + ratio          (Section 4.1.2)
 Tables 3-4: RCSL vs MOM-RCSL, linear model, 3 attacks (Section 4.2.1)
 Tables 5-6: RCSL vs MOM-RCSL, logistic, class (im)balance (Section 4.2.2)
+Coverage table: plug-in CI coverage/width  (repro.infer, DESIGN.md §9)
 
 Paper settings: N = 1000 x (100+1), n=1000, m=100 workers, p in {1,30},
 K=10, 500 reps. ``reps`` is reduced by default for CPU runtime; pass
---full for the paper's 500.
+--full to ``examples/rcsl_regression.py`` for the paper's 500. Every
+table function threads the size parameters (``n``, ``m_workers``,
+``p``) so ``tests/test_paper_tables.py`` can smoke the exact table
+code at toy sizes.
 """
 from __future__ import annotations
 
@@ -20,6 +24,7 @@ import numpy as np
 from repro.core import attacks as atk
 from repro.core import rcsl as R
 from repro.core import vrmom as V
+from repro.infer import coverage_run
 
 
 def _mean_vec(p):
@@ -47,47 +52,50 @@ def _simulate_mean_estimation(key, p, m_workers, n, alpha, K, estimator):
     return est - mu
 
 
-def _rmse_mean_est(p, alpha, K, estimator, reps, seed=0):
+def _rmse_mean_est(p, alpha, K, estimator, reps, seed=0, m_workers=100,
+                   n=1000):
     keys = jax.random.split(jax.random.PRNGKey(seed), reps)
-    f = functools.partial(_simulate_mean_estimation, p=p, m_workers=100,
-                          n=1000, alpha=alpha, K=K, estimator=estimator)
+    f = functools.partial(_simulate_mean_estimation, p=p, m_workers=m_workers,
+                          n=n, alpha=alpha, K=K, estimator=estimator)
     errs = jax.lax.map(lambda k: f(k), keys, batch_size=50)
     per_rep = jnp.sqrt(jnp.mean(errs**2, axis=-1))
     return float(jnp.mean(per_rep)), float(jnp.std(per_rep))
 
 
-def table1(reps=100):
+def table1(reps=100, m_workers=100, n=1000, dims=(1, 30)):
     """name,us_per_call,derived rows: RMSE(VRMOM) for K grid x alpha grid."""
     rows = []
-    for p in (1, 30):
+    for p in dims:
         for K in (10, 20, 50, 100):
             for alpha in (0.0, 0.05, 0.1, 0.15):
-                rmse, sd = _rmse_mean_est(p, alpha, K, "vrmom", reps)
+                rmse, sd = _rmse_mean_est(p, alpha, K, "vrmom", reps,
+                                          m_workers=m_workers, n=n)
                 rows.append((f"table1/p{p}/K{K}/a{alpha}", rmse, sd))
     return rows
 
 
-def table2(reps=200):
+def table2(reps=200, m_workers=100, n=1000, dims=(1, 30)):
     rows = []
-    for p in (1, 30):
+    for p in dims:
         for alpha in (0.0, 0.05, 0.1, 0.15):
-            rv, _ = _rmse_mean_est(p, alpha, 10, "vrmom", reps)
-            rm, _ = _rmse_mean_est(p, alpha, 10, "mom", reps)
+            rv, _ = _rmse_mean_est(p, alpha, 10, "vrmom", reps,
+                                   m_workers=m_workers, n=n)
+            rm, _ = _rmse_mean_est(p, alpha, 10, "mom", reps,
+                                   m_workers=m_workers, n=n)
             rows.append((f"table2/p{p}/a{alpha}/vrmom", rv, rv / rm))
             rows.append((f"table2/p{p}/a{alpha}/mom", rm, 1.0))
     return rows
 
 
 def _rcsl_rmse(model, attack, alpha, aggregator, reps, mu_x=0.0, seed=0,
-               labelflip=False):
-    p = 30
+               labelflip=False, p=30, m_workers=100, n=1000):
     theta = R.paper_theta_star(p)
     prob = (R.LinearRegressionProblem() if model == "linear"
             else R.LogisticRegressionProblem())
 
     def one(key):
         kd, kr = jax.random.split(key)
-        shards = R.make_shards(kd, N_per_machine=1000, m_workers=100, p=p,
+        shards = R.make_shards(kd, N_per_machine=n, m_workers=m_workers, p=p,
                                theta_star=theta, model=model, mu_x=mu_x)
         est, _ = R.rcsl(prob, shards, kr, alpha=alpha, attack=attack,
                         aggregator=aggregator, rounds=6, labelflip=labelflip)
@@ -98,31 +106,53 @@ def _rcsl_rmse(model, attack, alpha, aggregator, reps, mu_x=0.0, seed=0,
     return float(jnp.mean(vals)), float(jnp.std(vals))
 
 
-def tables34(reps=20):
+def tables34(reps=20, p=30, m_workers=100, n=1000):
     """Linear model, attacks x alpha, RCSL (VRMOM) vs MOM-RCSL."""
+    kw = dict(p=p, m_workers=m_workers, n=n)
     rows = []
-    r_v, _ = _rcsl_rmse("linear", "none", 0.0, "vrmom", reps)
-    r_m, _ = _rcsl_rmse("linear", "none", 0.0, "median", reps)
+    r_v, _ = _rcsl_rmse("linear", "none", 0.0, "vrmom", reps, **kw)
+    r_m, _ = _rcsl_rmse("linear", "none", 0.0, "median", reps, **kw)
     rows.append(("table3/none/a0/rcsl", r_v, r_v / r_m))
     rows.append(("table3/none/a0/mom-rcsl", r_m, 1.0))
     for attack in ("gaussian", "omniscient", "bitflip"):
         for alpha in (0.05, 0.1, 0.15):
-            r_v, _ = _rcsl_rmse("linear", attack, alpha, "vrmom", reps)
-            r_m, _ = _rcsl_rmse("linear", attack, alpha, "median", reps)
+            r_v, _ = _rcsl_rmse("linear", attack, alpha, "vrmom", reps, **kw)
+            r_m, _ = _rcsl_rmse("linear", attack, alpha, "median", reps, **kw)
             rows.append((f"table3/{attack}/a{alpha}/rcsl", r_v, r_v / r_m))
             rows.append((f"table3/{attack}/a{alpha}/mom-rcsl", r_m, 1.0))
     return rows
 
 
-def tables56(reps=10):
+def tables56(reps=10, p=30, m_workers=100, n=1000):
     """Logistic model, label-flip Byzantine gradients, mu_x in {0, 0.5}."""
+    kw = dict(p=p, m_workers=m_workers, n=n)
     rows = []
     for mu_x in (0.0, 0.5):
         for alpha in (0.0, 0.05, 0.1, 0.15):
             r_v, _ = _rcsl_rmse("logistic", "none", alpha, "vrmom", reps,
-                                mu_x=mu_x, labelflip=True)
+                                mu_x=mu_x, labelflip=True, **kw)
             r_m, _ = _rcsl_rmse("logistic", "none", alpha, "median", reps,
-                                mu_x=mu_x, labelflip=True)
+                                mu_x=mu_x, labelflip=True, **kw)
             rows.append((f"table5/mu{mu_x}/a{alpha}/rcsl", r_v, r_v / r_m))
             rows.append((f"table5/mu{mu_x}/a{alpha}/mom-rcsl", r_m, 1.0))
+    return rows
+
+
+def table_coverage(reps=100, p=5, m_workers=100, n=200, level=0.95,
+                   alphas=(0.0, 0.1), attack="gaussian"):
+    """Plug-in CI coverage/width (repro.infer): the paper's normality
+    result in table form. Rows: (name, empirical coverage, mean width)
+    for VRMOM-RCSL vs MOM-RCSL on the linear model."""
+    rows = []
+    for alpha in alphas:
+        for agg in ("vrmom", "median"):
+            cell = coverage_run(
+                model="linear", attack="none" if alpha == 0.0 else attack,
+                alpha=alpha, estimator=agg, reps=reps, N_per_machine=n,
+                m_workers=m_workers, p=p, rounds=6, level=level,
+                batch_size=min(reps, 12))
+            s = cell.summary()
+            name = "rcsl" if agg == "vrmom" else "mom-rcsl"
+            rows.append((f"coverage/{attack}/a{alpha}/{name}",
+                         s["coverage"], s["mean_width"]))
     return rows

@@ -51,6 +51,14 @@ def main():
     print(f"fused Estimator max|err| vs jnp estimator: "
           f"{float(jnp.max(jnp.abs(out - ref))):.2e}")
 
+    print("\nWhere next:")
+    print("  examples/rcsl_regression.py  - Algorithm 1 + plug-in CIs "
+          "(the paper's normality result)")
+    print("  examples/train_byzantine.py  - robust training on the model zoo")
+    print("  examples/serve.py            - robust replicated decoding")
+    print("  README.md                    - subsystem map and results; "
+          "DESIGN.md for the why")
+
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,108 @@
+"""Internal link/anchor checker for the repo's markdown docs.
+
+Verifies that every relative link in the given markdown files points at
+an existing file, and that every ``#anchor`` fragment resolves to a
+heading in the target file under GitHub's slugification (lowercase,
+punctuation stripped, spaces to hyphens — the rule that turns
+``## §9 Statistical inference: ...`` into ``#9-statistical-inference-...``).
+External (http/https) links are not fetched.
+
+  python scripts/check_docs.py README.md DESIGN.md
+
+Exits non-zero listing every broken link. Run by the CI docs job.
+"""
+from __future__ import annotations
+
+import functools
+import re
+import sys
+from collections import Counter
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!!)\[[^\]]+\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase; drop everything that is not a
+    word character, space, or hyphen; spaces become hyphens."""
+    slug = heading.strip().lower()
+    slug = re.sub(r"[^\w\- ]", "", slug, flags=re.UNICODE)
+    return slug.replace(" ", "-")
+
+
+def _strip_fences(text: str):
+    """Yield (lineno, line) outside fenced code blocks."""
+    in_fence = False
+    for i, line in enumerate(text.splitlines(), 1):
+        if FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            yield i, line
+
+
+@functools.lru_cache(maxsize=None)
+def anchors_of(path: Path) -> frozenset:
+    """All valid GitHub anchors of a markdown file (with -1/-2 suffixes
+    for duplicate headings). Cached: every anchored link into a file
+    would otherwise re-parse it."""
+    seen = Counter()
+    out = set()
+    for _, line in _strip_fences(path.read_text()):
+        m = HEADING_RE.match(line)
+        if not m:
+            continue
+        base = github_slug(m.group(2))
+        n = seen[base]
+        out.add(base if n == 0 else f"{base}-{n}")
+        seen[base] += 1
+    return frozenset(out)
+
+
+def check_file(md: Path, root: Path):
+    errors = []
+    for lineno, line in _strip_fences(md.read_text()):
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, anchor = target.partition("#")
+            dest = (md.parent / path_part).resolve() if path_part else md
+            if path_part and not dest.exists():
+                errors.append(f"{md.relative_to(root)}:{lineno}: "
+                              f"missing file {target!r}")
+                continue
+            if anchor:
+                if dest.suffix.lower() not in (".md", ".markdown"):
+                    continue
+                if anchor.lower() not in anchors_of(dest):
+                    errors.append(f"{md.relative_to(root)}:{lineno}: "
+                                  f"anchor {target!r} not found in "
+                                  f"{dest.name}")
+    return errors
+
+
+def main(argv):
+    root = Path(__file__).resolve().parent.parent
+    files = [root / a for a in argv] if argv else [root / "README.md",
+                                                   root / "DESIGN.md"]
+    errors = []
+    for md in files:
+        if not md.exists():
+            errors.append(f"missing doc file: {md}")
+            continue
+        errors.extend(check_file(md, root))
+        print(f"checked {md.relative_to(root)}")
+    if errors:
+        print("\nBROKEN LINKS:")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print("all internal links and anchors resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,8 +1,10 @@
 """repro: Byzantine-robust distributed training with VRMOM (JAX/TPU).
 
 Faithful implementation of Tu, Liu, Mao & Chen (2021) — the VRMOM
-estimator and the RCSL algorithm — integrated as a first-class robust
-gradient-aggregation layer in a multi-pod JAX training/serving framework.
-See README.md / DESIGN.md / EXPERIMENTS.md.
+estimator, the RCSL algorithm, and the plug-in asymptotic-normality
+inference layer — integrated as a first-class robust
+gradient-aggregation layer in a multi-pod JAX training/serving
+framework. See README.md for the subsystem map and results, DESIGN.md
+§1-§9 for the design record.
 """
 __version__ = "1.0.0"

@@ -1,7 +1,22 @@
-"""Minimal pytree checkpointing: .npz payload + JSON tree structure.
+"""Minimal pytree checkpointing: one .npz payload + a JSON manifest.
+
+``save(path, tree)`` writes every leaf of an arbitrary pytree (params,
+optimizer state, scheduler counters) into ``arrays.npz`` in
+tree-flatten order plus a ``tree.json`` manifest recording the treedef
+string and original dtypes; ``restore(path, like)`` loads them back
+into the *structure and shardings* of a template tree — leaves are
+``device_put`` onto ``like``'s shardings, so a checkpoint written from
+one mesh layout restores onto another without a resharding pass.
+
+bf16 has no npz representation, so bf16 leaves are stored as raw
+``uint16`` bit patterns and re-viewed on restore — a bit-exact
+round-trip (``tests/test_checkpoint.py``). Restore trusts the
+template's treedef rather than re-parsing the manifest; the manifest
+exists for tooling and forward-compat checks.
 
 Arrays are gathered to host (fine at the scales we train on CPU; on a
-real pod this would be an async, per-shard writer — noted in DESIGN.md).
+real pod this would be an async per-shard writer — a known scale-out
+item, not yet needed by any benchmark).
 """
 from __future__ import annotations
 

@@ -22,6 +22,7 @@ __all__ = [
     "bitflip",
     "signflip",
     "zero",
+    "wrong_value",
     "get",
     "REGISTRY",
 ]
@@ -75,6 +76,14 @@ def zero(key, v, mask):
     return _apply(mask, v, jnp.zeros_like(v))
 
 
+def wrong_value(key, v, mask, value: float = 100.0):
+    """Wrong-value attack: Byzantine machines all report the same fixed
+    constant. A one-sided, coordinated attack — unlike ``gaussian`` it
+    does not average out across machines, so it stresses the median's
+    contamination bias (and the CI coverage of ``repro.infer``)."""
+    return _apply(mask, v, jnp.full_like(v, value))
+
+
 REGISTRY = {
     "none": lambda key, v, mask: v,
     "gaussian": gaussian,
@@ -82,6 +91,7 @@ REGISTRY = {
     "bitflip": bitflip,
     "signflip": signflip,
     "zero": zero,
+    "wrong_value": wrong_value,
 }
 
 

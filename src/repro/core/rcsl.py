@@ -8,7 +8,11 @@ One round (master H0 = shard 0):
         (1/n) sum_{i in H0} f(X_i, theta) - <g_0 - g_bar, theta>
 
 ``Problem`` abstracts the model: local gradients, the H0 per-sample
-gradients (for the paper-faithful sigma_hat), and the surrogate solve.
+gradients (for the paper-faithful sigma_hat), the surrogate solve, and —
+for the statistical-inference layer (``repro.infer``, DESIGN.md §9) —
+the per-machine plug-in statistics ``local_hessian`` (the local loss
+Hessian at theta) and ``local_moments`` (first/second moments of the
+per-sample gradients, the inputs to the sandwich covariance).
 Linear regression has the paper's closed form; logistic regression uses
 Newton; ``GenericProblem`` uses autodiff + gradient descent.
 """
@@ -51,6 +55,20 @@ class LinearRegressionProblem:
         resid = X @ theta - Y
         return 2.0 * X * resid[:, None]  # [n, p]
 
+    def local_hessian(self, theta, X, Y):
+        """Local loss Hessian 2 X^T X / n (the ridge is a solver aid,
+        not part of the inferential target, so it is excluded)."""
+        return 2.0 * (X.T @ X) / X.shape[0]
+
+    def local_moments(self, theta, X, Y):
+        """(mean, second moment) of the per-sample gradients, closed
+        form: g_i = 2 x_i r_i, so E_n[g g^T] = 4 X^T diag(r^2) X / n."""
+        n = X.shape[0]
+        resid = X @ theta - Y
+        g1 = 2.0 * (X.T @ resid) / n
+        g2 = 4.0 * jnp.einsum("np,n,nq->pq", X, resid * resid, X) / n
+        return g1, g2
+
     def init_theta(self, X, Y):
         n, p = X.shape
         A = X.T @ X / n + self.ridge * jnp.eye(p)
@@ -78,6 +96,18 @@ class LogisticRegressionProblem:
     def per_sample_grads(self, theta, X, Y):
         mu = jax.nn.sigmoid(X @ theta)
         return X * (mu - Y)[:, None]
+
+    def local_hessian(self, theta, X, Y):
+        mu = jax.nn.sigmoid(X @ theta)
+        w = mu * (1.0 - mu)
+        return (X.T * w) @ X / X.shape[0]
+
+    def local_moments(self, theta, X, Y):
+        n = X.shape[0]
+        d = jax.nn.sigmoid(X @ theta) - Y
+        g1 = X.T @ d / n
+        g2 = jnp.einsum("np,n,nq->pq", X, d * d, X) / n
+        return g1, g2
 
     def init_theta(self, X, Y):
         p = X.shape[1]
@@ -116,6 +146,13 @@ class GenericProblem:
 
     def per_sample_grads(self, theta, X, Y):
         return jax.vmap(jax.grad(self.loss_fn), in_axes=(None, 0, 0))(theta, X, Y)
+
+    def local_hessian(self, theta, X, Y):
+        return jax.hessian(self._mean_loss)(theta, X, Y)
+
+    def local_moments(self, theta, X, Y):
+        g = self.per_sample_grads(theta, X, Y)  # [n, p]
+        return jnp.mean(g, axis=0), g.T @ g / g.shape[0]
 
     def init_theta(self, X, Y):
         theta = jnp.zeros(X.shape[1])

@@ -1,10 +1,23 @@
-"""Synthetic data pipelines.
+"""Synthetic data pipelines for training and the statistical experiments.
 
-Deterministic PRNG-derived token streams (LM training) and the paper's
-GLM simulation data (re-exported from core.rcsl). Batches are produced
-host-side per step from a counter so the pipeline is restartable from a
-checkpointed step; ``shard_batch`` places a global batch according to the
-mesh batch axes.
+Two data families share this module:
+
+* **LM token streams** (``lm_batch`` / ``lm_stream``): deterministic,
+  counter-indexed batches of a noisy integer AR process — structured
+  enough that next-token loss is learnable, cheap enough for CI. Batches
+  are derived host-side from ``(seed, step)`` alone, so a run restored
+  from a checkpointed step (``repro.checkpoint``) resumes on exactly the
+  data it would have seen. Family-specific extras ride the same dict:
+  ``frames`` for encoder-decoder (whisper) configs, ``patches`` for VLM
+  configs (which also shorten ``tokens`` to fit the patch prefix).
+* **GLM simulation data** for the paper's Section 4 experiments:
+  ``Shards`` / ``make_shards`` / ``paper_theta_star`` are re-exported
+  from :mod:`repro.core.rcsl` so statistical scripts can import all of
+  their data handling from one place.
+
+``shard_batch`` places a host batch onto the mesh with the batch dim
+sharded over the batch axes from ``repro.dist.sharding.batch_axes_for``
+(DESIGN.md §3 worker-axis conventions).
 """
 from __future__ import annotations
 

@@ -54,6 +54,7 @@ __all__ = [
     "aggregate",
     "aggregate_stacked_rrs",
     "aggregate_stacked_auto",
+    "aggregate_symmetric_stacked",
     "robust_backward",
     "robust_dot",
     "robust_dot_enabled",
@@ -161,6 +162,30 @@ def aggregate_stacked_auto(grads, est: EstimatorLike = "vrmom"):
         return out.reshape(g.shape[1:]).astype(g.dtype)
 
     return jax.tree.map(one, grads)
+
+
+def aggregate_symmetric_stacked(mats, est: EstimatorLike = "vrmom"):
+    """Robustly aggregate a stack of symmetric matrices ``[W, p, p]``.
+
+    Used by the inference layer (DESIGN.md §9) for per-machine Hessian
+    and gradient-second-moment stacks. Only the ``p(p+1)/2`` upper-
+    triangle coordinates ride the wire — the redundant lower triangle
+    would double the RRS payload for bit-identical columns — and the
+    aggregated triangle is mirrored back, so the output is *exactly*
+    symmetric (coordinate-wise aggregation of a symmetric stack is
+    symmetric in exact arithmetic, but downstream ``linalg.solve``
+    deserves the guarantee, not the accident).
+    """
+    est = _wire_estimator(est)
+    W, p, q = mats.shape
+    if p != q:
+        raise ValueError(f"expected [W, p, p] symmetric stack, got {mats.shape}")
+    iu = jnp.triu_indices(p)
+    tri = mats[:, iu[0], iu[1]].astype(jnp.float32)   # [W, p(p+1)/2]
+    agg = est.apply(tri, axis=0)
+    out = jnp.zeros((p, p), jnp.float32).at[iu].set(agg)
+    out = out + jnp.triu(out, 1).T
+    return out.astype(mats.dtype)
 
 
 def aggregate(grads, mesh, worker_axes, *, mode: str = "stacked-rrs",

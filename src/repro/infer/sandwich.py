@@ -1,0 +1,384 @@
+"""Plug-in sandwich covariance and confidence intervals for RCSL.
+
+The paper's headline theoretical result — the first asymptotic-normality
+theorem for Byzantine-robust distributed learning — says that at the
+RCSL fixed point the estimator solves the *robustly aggregated*
+estimating equation ``gbar(theta_hat) = 0``, hence
+
+    sqrt(N) (theta_hat - theta*)  ->  N(0,  H^{-1} C(Sigma_g) H^{-1})
+
+where ``H = E[grad^2 f]`` is the population Hessian, ``Sigma_g =
+Cov(grad f)`` the per-sample gradient covariance, and ``C`` the
+aggregator's asymptotic covariance transform: Theorem 4 (eq. 13/14) for
+VRMOM, Proposition 1 (eq. 17) for MOM, the identity for the mean. This
+module turns that statement into confidence intervals a master can
+actually compute in the Byzantine setting (DESIGN.md §9):
+
+1. *Per-machine statistics* (:func:`machine_stats`): every machine
+   reports its local Hessian and the first/second moments of its
+   per-sample gradients via the ``Problem`` interface
+   (``local_hessian`` / ``local_moments``, ``core/rcsl.py``). Byzantine
+   machines report garbage — :func:`corrupt_stats` models that with the
+   same ``core.attacks`` used on gradients.
+2. *Robust plug-in* (:func:`robust_moments`): the stacked ``[m+1, ...]``
+   statistics are aggregated coordinate-wise with an §7 ``Estimator``
+   (symmetric-matrix stacks ride
+   ``dist.robust_reduce.aggregate_symmetric_stacked``, which aggregates
+   only the upper triangle and mirrors — half the wire, exactly
+   symmetric output), so the covariance estimate survives the same
+   ``floor(alpha*m)`` corrupted machines as the point estimate.
+3. *Sandwich + factor* (:func:`sandwich_cov`): ``Xi = H^{-1} C H^{-1}``
+   with ``C`` from :func:`vrmom_cov_factor` — a fully jittable
+   Theorem-4 evaluation built on :func:`bvn_cdf`, a fixed-node
+   Gauss-Legendre bivariate-normal CDF (the host-side numpy
+   ``core.vrmom.vrmom_asymptotic_cov`` is its test oracle).
+4. *Intervals* (:func:`confidence_intervals`): per-coordinate normal
+   CIs ``theta_hat_l ± z sqrt(Xi_ll / N)`` and Bonferroni simultaneous
+   bands.
+
+Everything composes with jit/vmap — the coverage harness
+(:mod:`repro.infer.coverage`) runs hundreds of full replications as one
+compiled program.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.scipy.special import ndtr, ndtri
+
+from ..core import attacks as _attacks
+from ..core.estimator import Estimator
+from ..core.vrmom import deltas, psi_sum, sigma_k_sq
+
+__all__ = [
+    "bvn_cdf",
+    "vrmom_cov_factor",
+    "mom_cov_factor",
+    "cov_factor",
+    "contamination_inflation",
+    "MachineStats",
+    "machine_stats",
+    "corrupt_stats",
+    "robust_moments",
+    "sandwich_cov",
+    "confidence_intervals",
+    "CIResult",
+    "InferenceResult",
+    "infer",
+]
+
+# Fixed Gauss-Legendre rule on [0, 1]; 24 nodes give ~1e-7 absolute
+# accuracy on the (smooth, bounded) bvn integrand — far below the
+# Monte-Carlo noise any coverage experiment can resolve.
+_GL_X, _GL_W = np.polynomial.legendre.leggauss(24)
+_GL_X01 = jnp.asarray((_GL_X + 1.0) / 2.0, jnp.float32)
+_GL_W01 = jnp.asarray(_GL_W / 2.0, jnp.float32)
+
+_RHO_EDGE = 1.0 - 1e-6
+
+
+def bvn_cdf(a, b, rho):
+    """Standard bivariate normal CDF ``P(Z1 <= a, Z2 <= b)``, jittable.
+
+    Uses the arcsin substitution of Drezner-Wesolowsky's single
+    integral,
+
+        P = Phi(a) Phi(b) + (1/2pi) int_0^{asin(rho)}
+              exp(-(a^2 - 2 a b sin t + b^2) / (2 cos^2 t)) dt,
+
+    whose integrand is smooth on the whole rho range, evaluated with a
+    fixed Gauss-Legendre rule — no data-dependent shapes, so it
+    broadcasts and vmaps freely. ``|rho| -> 1`` is handled exactly
+    (``Phi(min(a,b))`` / ``max(0, Phi(a)+Phi(b)-1)``), which the
+    correlation-matrix diagonal always hits.
+    """
+    a, b, rho = jnp.broadcast_arrays(
+        jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32),
+        jnp.asarray(rho, jnp.float32))
+    r = jnp.clip(rho, -_RHO_EDGE, _RHO_EDGE)
+    s = jnp.arcsin(r)[..., None]                       # [..., 1]
+    theta = s * _GL_X01                                # [..., Q]
+    sin_t = jnp.sin(theta)
+    cos2_t = jnp.maximum(jnp.cos(theta) ** 2, 1e-12)
+    a_e, b_e = a[..., None], b[..., None]
+    integrand = jnp.exp(-(a_e * a_e - 2.0 * a_e * b_e * sin_t + b_e * b_e)
+                        / (2.0 * cos2_t))
+    quad = jnp.sum(_GL_W01 * integrand, axis=-1) * s[..., 0]
+    base = ndtr(a) * ndtr(b) + quad / (2.0 * jnp.pi)
+    hi = ndtr(jnp.minimum(a, b))                       # rho -> +1
+    lo = jnp.maximum(ndtr(a) + ndtr(b) - 1.0, 0.0)     # rho -> -1
+    return jnp.where(rho >= _RHO_EDGE, hi,
+                     jnp.where(rho <= -_RHO_EDGE, lo, base))
+
+
+def _corr_parts(Sigma, eps=1e-12):
+    Sigma = jnp.asarray(Sigma, jnp.float32)
+    var = jnp.clip(jnp.diagonal(Sigma), eps, None)
+    sd = jnp.sqrt(var)
+    corr = jnp.clip(Sigma / jnp.outer(sd, sd), -1.0, 1.0)
+    return sd, corr
+
+
+def vrmom_cov_factor(Sigma, K: int = 10):
+    """Theorem 4 (eq. 13/14) asymptotic covariance ``C`` of VRMOM, jittable.
+
+    ``sqrt(N)(vrmom - mu) -> N(0, C)`` for machine means with per-sample
+    covariance ``Sigma``. Jit/vmap-compatible twin of the host-side
+    ``core.vrmom.vrmom_asymptotic_cov`` (its numerical oracle in
+    ``tests/test_infer.py``); ``K`` is static under jit.
+    """
+    sd, corr = _corr_parts(Sigma)
+    d = deltas(K)                                       # [K]
+    taus = jnp.arange(1, K + 1, dtype=jnp.float32) / (K + 1)
+    P = bvn_cdf(d[None, None, :, None], d[None, None, None, :],
+                corr[:, :, None, None])                 # [p, p, K, K]
+    acc = jnp.sum(P - taus[:, None] * taus[None, :], axis=(-2, -1))
+    return acc / (psi_sum(K) ** 2) * jnp.outer(sd, sd)
+
+
+def mom_cov_factor(Sigma):
+    """Proposition 1 (eq. 17) asymptotic covariance of MOM, closed form.
+
+    ``2 pi P(0,0;rho) - pi/2`` collapses to ``arcsin(rho)`` — exact, no
+    quadrature. The diagonal recovers Minsker's ``pi/2``.
+    """
+    sd, corr = _corr_parts(Sigma)
+    return jnp.arcsin(corr) * jnp.outer(sd, sd)
+
+
+def cov_factor(Sigma, est: Estimator):
+    """The ``C(Sigma)`` transform matching an aggregation method.
+
+    ``vrmom`` -> Theorem 4, ``median``/``mom`` -> Proposition 1,
+    ``mean`` -> identity (the CLT). Other estimators have no
+    normality theory in the paper and are rejected.
+    """
+    if est.method == "vrmom":
+        return vrmom_cov_factor(Sigma, K=est.K)
+    if est.method in ("median", "mom"):
+        return mom_cov_factor(Sigma)
+    if est.method == "mean":
+        return jnp.asarray(Sigma, jnp.float32)
+    raise ValueError(
+        f"no asymptotic-normality result for estimator {est.method!r}; "
+        "inference supports vrmom, median/mom, and mean")
+
+
+def contamination_inflation(alpha: float,
+                            est: Union[str, Estimator] = "vrmom") -> float:
+    """Finite-alpha variance inflation of the CIs (DESIGN.md §9).
+
+    The paper's CLT treats the Byzantine fraction as asymptotically
+    vanishing; at a *fixed* alpha the estimators acquire extra variance
+    even under a *symmetric* attack. First-order influence-function
+    analysis at the worst symmetric contamination (garbage at +-inf,
+    each side with probability 1/2, in machine-mean units z):
+
+    * the median's IF is ``sign(z) sqrt(pi/2)``, and its sparsity
+      denominator shrinks to ``(1-a) f`` at the mixture, scaling the IF
+      by ``(1-a)^{-1}``;
+    * VRMOM's quantile-count correction has IF
+      ``-(count(z) - K/2) / psi_sum`` with a *constant* (not estimated)
+      denominator — no sparsity scaling — and a garbage value of
+      ``+- K / (2 psi_sum)``, reinforcing the median's garbage IF.
+
+    With ``a = pi/2`` (median IF variance), ``b = sigma_K^2``
+    (correction IF variance — eq. (9) itself), ``c = -pi/4`` (their
+    covariance, from ``a + 2c = 0``), the contaminated variance over
+    the clean ``sigma_K^2`` is
+
+        [(1-al) ((1-al)^{-2} a + b + 2 (1-al)^{-1} c)
+         + al ((1-al)^{-1} sqrt(pi/2) + K/(2 psi_sum))^2] / sigma_K^2 .
+
+    For the plain median the correction terms vanish and the formula
+    collapses to the exact rank-offset result ``(1-al)^{-2}``; at
+    ``al = 0`` both are 1. The scalar multiplies the whole sandwich —
+    empirical coverage across attacks is validated in
+    ``BENCH_inference.json``. One-sided coordinated attacks (e.g.
+    ``wrong_value``) additionally *bias* the median by ``O(alpha * s)``
+    — a non-vanishing term no variance correction can absorb; the
+    coverage tables report that degradation honestly.
+    """
+    if not 0.0 <= alpha < 0.5:
+        raise ValueError(f"alpha must be in [0, 0.5), got {alpha}")
+    if alpha == 0.0:
+        return 1.0
+    est = Estimator.coerce(est)
+    g = 1.0 / (1.0 - alpha)
+    if est.method in ("median", "mom"):
+        return g * g
+    if est.method == "mean":
+        return 1.0  # no robustness, no meaningful symmetric-garbage limit
+    a = math.pi / 2.0
+    b = sigma_k_sq(est.K)
+    c = -math.pi / 4.0
+    honest = g * g * a + b + 2.0 * g * c
+    garbage = (g * math.sqrt(a) + est.K / (2.0 * psi_sum(est.K))) ** 2
+    return ((1.0 - alpha) * honest + alpha * garbage) / b
+
+
+# ---------------------------------------------------------------------------
+# Per-machine statistics and their robust aggregation
+# ---------------------------------------------------------------------------
+
+
+class MachineStats(NamedTuple):
+    """Stacked per-machine inference statistics (worker axis 0).
+
+    hessian: ``[m+1, p, p]`` local Hessians at theta_hat.
+    grad1:   ``[m+1, p]``    local mean per-sample gradient.
+    grad2:   ``[m+1, p, p]`` local second moment ``E_n[g g^T]``.
+    n:       per-machine sample size (python int; static).
+    """
+
+    hessian: jnp.ndarray
+    grad1: jnp.ndarray
+    grad2: jnp.ndarray
+    n: int
+
+
+def machine_stats(problem, theta, shards) -> MachineStats:
+    """Compute every machine's (Hessian, gradient-moment) report."""
+
+    def one(X, Y):
+        H = problem.local_hessian(theta, X, Y)
+        g1, g2 = problem.local_moments(theta, X, Y)
+        return H, g1, g2
+
+    H, g1, g2 = jax.vmap(one)(shards.X, shards.Y)
+    return MachineStats(H, g1, g2, int(shards.X.shape[1]))
+
+
+def corrupt_stats(key, stats: MachineStats, mask, attack: str) -> MachineStats:
+    """Byzantine machines report arbitrary statistics, not just arbitrary
+    gradients: apply a ``core.attacks`` transform to each stacked leaf
+    (rows selected by ``mask``; row 0, the master, is never corrupted by
+    ``attacks.byzantine_mask``)."""
+    fn = _attacks.get(attack)
+    kh, k1, k2 = jax.random.split(key, 3)
+    return MachineStats(
+        hessian=fn(kh, stats.hessian, mask),
+        grad1=fn(k1, stats.grad1, mask),
+        grad2=fn(k2, stats.grad2, mask),
+        n=stats.n,
+    )
+
+
+def robust_moments(stats: MachineStats, est: Union[str, Estimator] = "vrmom"):
+    """Aggregate stacked statistics into plug-in ``(H_hat, Sigma_hat)``.
+
+    Coordinate-wise robust aggregation over the machine axis — the
+    symmetric stacks through
+    ``dist.robust_reduce.aggregate_symmetric_stacked`` (upper-triangle
+    wire, DESIGN.md §9) — then ``Sigma_hat = E[gg^T] - g1 g1^T``.
+    Like ``core.rcsl.aggregate_gradients``, the statistical path runs
+    the jnp backend: the stacks are tiny and whole-vector estimators
+    are not needed here.
+    """
+    from ..dist.robust_reduce import aggregate_symmetric_stacked
+
+    est = Estimator.coerce(est, backend="jnp").require_coordinatewise(
+        "plug-in covariance aggregation (repro.infer)")
+    H = aggregate_symmetric_stacked(stats.hessian, est)
+    g2 = aggregate_symmetric_stacked(stats.grad2, est)
+    g1 = est.apply(stats.grad1.astype(jnp.float32), axis=0)
+    Sigma = g2 - jnp.outer(g1, g1)
+    return H, Sigma
+
+
+def sandwich_cov(H, Sigma, est: Union[str, Estimator] = "vrmom"):
+    """``Xi = H^{-1} C(Sigma) H^{-1}``: the asymptotic covariance of
+    ``sqrt(N)(theta_hat - theta*)`` for an RCSL run aggregated with
+    ``est``. ``H`` is symmetrized before the solves."""
+    est = Estimator.coerce(est)
+    C = cov_factor(Sigma, est)
+    Hs = 0.5 * (H + H.T).astype(jnp.float32)
+    HinvC = jnp.linalg.solve(Hs, C)
+    return jnp.linalg.solve(Hs, HinvC.T).T
+
+
+# ---------------------------------------------------------------------------
+# Intervals
+# ---------------------------------------------------------------------------
+
+
+class CIResult(NamedTuple):
+    """Per-coordinate confidence intervals at a nominal level.
+
+    lower/upper: ``[p]`` bounds; se: ``[p]`` standard errors
+    ``sqrt(Xi_ll / N)``; z: the critical value actually used (Bonferroni-
+    adjusted when simultaneous).
+    """
+
+    lower: jnp.ndarray
+    upper: jnp.ndarray
+    se: jnp.ndarray
+    level: float
+    z: jnp.ndarray
+
+
+def confidence_intervals(theta, Xi, N: int, level: float = 0.95,
+                         simultaneous: bool = False) -> CIResult:
+    """Normal plug-in CIs ``theta_l ± z sqrt(Xi_ll / N)``.
+
+    ``simultaneous=True`` applies the Bonferroni correction
+    ``z_{1 - (1-level)/(2p)}`` so the band covers all p coordinates
+    jointly at the nominal level.
+    """
+    theta = jnp.asarray(theta)
+    p = theta.shape[-1]
+    q = (1.0 - level) / (p if simultaneous else 1.0)
+    z = ndtri(1.0 - q / 2.0)
+    se = jnp.sqrt(jnp.clip(jnp.diagonal(Xi), 0.0, None) / N)
+    half = z * se
+    return CIResult(lower=theta - half, upper=theta + half, se=se,
+                    level=level, z=z)
+
+
+class InferenceResult(NamedTuple):
+    """Everything the plug-in inference layer produces for one RCSL run."""
+
+    theta: jnp.ndarray    # [p] point estimate the CIs are centred on
+    ci: CIResult          # per-coordinate (or simultaneous) intervals
+    cov: jnp.ndarray      # [p, p] sandwich Xi (covariance of sqrt(N) error)
+    H: jnp.ndarray        # [p, p] robust plug-in Hessian
+    Sigma: jnp.ndarray    # [p, p] robust plug-in gradient covariance
+    N: int                # total sample size (m+1) * n
+
+
+def infer(problem, shards, theta,
+          estimator: Union[str, Estimator] = "vrmom", K: int = 10,
+          level: float = 0.95, simultaneous: bool = False,
+          alpha: float = 0.0, attack: str = "none",
+          key: Optional[jax.Array] = None) -> InferenceResult:
+    """Plug-in inference for an RCSL point estimate (DESIGN.md §9).
+
+    ``estimator`` names the aggregation the point estimate was computed
+    with — it is used both to aggregate the per-machine statistics and
+    to pick the asymptotic factor ``C`` (Theorem 4 for VRMOM). ``alpha``
+    is the assumed Byzantine fraction: it scales the sandwich by the
+    finite-alpha :func:`contamination_inflation` (a no-op at 0), and —
+    for simulations — with ``attack``/``key`` it corrupts the stacked
+    statistics of ``floor(alpha*m)`` machines before aggregation, so the
+    CI is computed under the same threat model the estimate survived.
+    Fully jittable (estimator/K/level/shapes static).
+    """
+    est = Estimator.coerce(estimator, backend="jnp")
+    if isinstance(estimator, str) and est.method == "vrmom":
+        est = est._replace(K=K)
+    stats = machine_stats(problem, theta, shards)
+    if attack != "none" and alpha > 0.0:
+        if key is None:
+            raise ValueError("corrupting stats (attack != 'none') needs a key")
+        mask = _attacks.byzantine_mask(stats.hessian.shape[0], alpha)
+        stats = corrupt_stats(key, stats, mask, attack)
+    H, Sigma = robust_moments(stats, est)
+    Xi = sandwich_cov(H, Sigma, est) * contamination_inflation(alpha, est)
+    N = stats.hessian.shape[0] * stats.n
+    ci = confidence_intervals(theta, Xi, N, level=level,
+                              simultaneous=simultaneous)
+    return InferenceResult(theta=theta, ci=ci, cov=Xi, H=H, Sigma=Sigma, N=N)

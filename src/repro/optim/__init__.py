@@ -1,10 +1,19 @@
 """Pure-JAX optimizers: SGD(+momentum), AdamW, Adafactor.
 
-Optimizer states mirror the params tree (dict of trees) so sharding
-specs derive mechanically from the param specs
-(``repro.dist.sharding.opt_state_specs``). Adafactor exists because f32
-Adam moments for llama3-405b exceed v5e HBM (DESIGN.md §5): factored
-second moment + bf16 momentum.
+Each optimizer is an ``Optimizer(init, update)`` pair of pure functions
+— ``init(params) -> state``, ``update(grads, state, params) ->
+(new_params, new_state)`` — selected by name via :func:`get` (the
+``ArchConfig.optimizer`` field). States are plain dicts of pytrees that
+mirror the params tree, so sharding specs derive mechanically from the
+param specs (``repro.dist.sharding.opt_state_specs``: adafactor's
+factored ``vr``/``vc`` leaves get the row/column slices of the param
+spec, everything else mirrors by shape). Updates are computed in f32
+regardless of param dtype and cast back on write.
+
+Adafactor exists because f32 Adam moments for llama3-405b exceed v5e
+HBM (DESIGN.md §5): a factored second moment (one row + one column
+vector per matrix, Shazeer & Stern 2018) plus a bf16 first moment
+brings optimizer state to ~3 GB/chip on the production mesh.
 """
 from __future__ import annotations
 

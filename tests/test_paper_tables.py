@@ -1,0 +1,57 @@
+"""Tiny-rep smoke tests for benchmarks/paper_tables.py.
+
+The table functions are the code behind ``examples/rcsl_regression.py``
+and the paper's Section 4 reproduction; these tests run the *exact*
+table code at toy sizes so a refactor of rcsl/infer cannot silently
+break the table script between releases.
+"""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks import paper_tables as T  # noqa: E402
+
+
+def _check_rows(rows, expect_n):
+    assert len(rows) == expect_n
+    for name, a, b in rows:
+        assert isinstance(name, str) and "/" in name
+        assert np.isfinite(a), name
+        assert np.isfinite(b), name
+
+
+def test_table1_smoke():
+    rows = T.table1(reps=2, m_workers=10, n=50, dims=(2,))
+    _check_rows(rows, 4 * 4)  # K grid x alpha grid, one dim
+    assert all(rmse >= 0 for _, rmse, _ in rows)
+
+
+def test_table2_smoke():
+    rows = T.table2(reps=2, m_workers=10, n=50, dims=(2,))
+    _check_rows(rows, 2 * 4)
+    # every vrmom row carries the ratio vs its mom row
+    assert all(r > 0 for name, _, r in rows if name.endswith("/vrmom"))
+
+
+def test_tables34_smoke():
+    rows = T.tables34(reps=2, p=3, m_workers=10, n=60)
+    _check_rows(rows, 2 + 3 * 3 * 2)
+    assert all(r > 0 for _, _, r in rows)
+
+
+def test_tables56_smoke():
+    rows = T.tables56(reps=1, p=3, m_workers=10, n=80)
+    _check_rows(rows, 2 * 4 * 2)
+
+
+def test_table_coverage_smoke():
+    rows = T.table_coverage(reps=6, p=3, m_workers=20, n=100,
+                            alphas=(0.0, 0.1))
+    _check_rows(rows, 2 * 2)
+    for name, cov, width in rows:
+        assert 0.0 <= cov <= 1.0, name
+        assert width > 0, name
