@@ -5,7 +5,9 @@ an existing file, and that every ``#anchor`` fragment resolves to a
 heading in the target file under GitHub's slugification (lowercase,
 punctuation stripped, spaces to hyphens — the rule that turns
 ``## §9 Statistical inference: ...`` into ``#9-statistical-inference-...``).
-External (http/https) links are not fetched.
+External (http/https) links are not fetched. Also verifies the
+DESIGN.md §10 rule-ID table stays in sync with the registered rules in
+``repro.lint.catalog`` (a stdlib-only import — no jax needed).
 
   python scripts/check_docs.py README.md DESIGN.md
 
@@ -18,6 +20,8 @@ import re
 import sys
 from collections import Counter
 from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 LINK_RE = re.compile(r"(?<!!)\[[^\]]+\]\(([^)\s]+)\)")
 HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
@@ -84,6 +88,34 @@ def check_file(md: Path, root: Path):
     return errors
 
 
+def check_rule_table(design: Path):
+    """DESIGN.md §10 table rows must match repro.lint.catalog exactly:
+    every registered rule documented, no stale IDs, names in sync."""
+    from repro.lint.catalog import AST_RULES, AUDIT_CHECKS
+
+    registered = {r.id: r.name for r in AST_RULES + AUDIT_CHECKS}
+    row_re = re.compile(r"^\|\s*(RL\d{3})\s*\|\s*([\w\-]+)\s*\|")
+    documented = {}
+    for _, line in _strip_fences(design.read_text()):
+        m = row_re.match(line.strip())
+        if m:
+            documented[m.group(1)] = m.group(2)
+
+    errors = []
+    for rid, name in registered.items():
+        if rid not in documented:
+            errors.append(f"DESIGN.md §10: registered rule {rid} "
+                          f"({name}) missing from the rule table")
+        elif documented[rid] != name:
+            errors.append(f"DESIGN.md §10: {rid} documented as "
+                          f"{documented[rid]!r} but registered as {name!r}")
+    for rid in documented:
+        if rid not in registered:
+            errors.append(f"DESIGN.md §10: table row {rid} has no "
+                          f"registered rule in repro.lint.catalog")
+    return errors
+
+
 def main(argv):
     root = Path(__file__).resolve().parent.parent
     files = [root / a for a in argv] if argv else [root / "README.md",
@@ -95,6 +127,10 @@ def main(argv):
             continue
         errors.extend(check_file(md, root))
         print(f"checked {md.relative_to(root)}")
+        if md.name == "DESIGN.md":
+            errors.extend(check_rule_table(md))
+            print("checked DESIGN.md §10 rule table against "
+                  "repro.lint.catalog")
     if errors:
         print("\nBROKEN LINKS:")
         for e in errors:

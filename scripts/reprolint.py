@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""reprolint CLI — AST rules + abstract trace auditor (DESIGN.md §10).
+
+Usage:
+    python scripts/reprolint.py [paths...]            # default: src tests
+    python scripts/reprolint.py --audit --host-devices 8
+    python scripts/reprolint.py benchmarks examples --warn-only
+    python scripts/reprolint.py --format json --out reprolint.json
+
+Exit status: 1 if any non-waived error finding or any audit failure,
+0 otherwise. ``--warn-only`` downgrades findings to warnings (exit 0),
+printing the count — the benchmarks/examples drift monitor.
+
+``--host-devices N`` must set XLA_FLAGS before jax is imported, which is
+why the auditor import happens inside main() after the env mutation.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="reprolint", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("paths", nargs="*", default=["src", "tests"],
+                    help="files/directories to lint (default: src tests)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON report to this file")
+    ap.add_argument("--audit", action="store_true",
+                    help="run the RL2xx trace auditor (imports jax)")
+    ap.add_argument("--host-devices", type=int, default=0, metavar="N",
+                    help="force N host CPU devices for the auditor mesh")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="downgrade findings to warnings (exit 0)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.host_devices:
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count="
+            f"{args.host_devices}").strip()
+
+    from repro.lint import AST_RULES, AUDIT_CHECKS, Report, lint_paths
+
+    if args.list_rules:
+        for r in AST_RULES + AUDIT_CHECKS:
+            print(f"{r.id}  {r.name:28s} {r.established}")
+        return 0
+
+    severity = "warning" if args.warn_only else "error"
+    findings = lint_paths(args.paths, ROOT, severity=severity)
+
+    audit = []
+    if args.audit:
+        from repro.lint.auditor import run_audit
+
+        audit = run_audit()
+
+    report = Report(findings=findings, audit=audit)
+    if args.out:
+        with open(args.out, "w", encoding="utf-8") as fh:
+            fh.write(report.to_json(list(args.paths)))
+    if args.format == "json":
+        print(report.to_json(list(args.paths)))
+    else:
+        print(report.render_text())
+
+    if report.errors or report.audit_failures:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -13,6 +13,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ..lint.hashguard import check_hashable_fields
+
 
 @dataclasses.dataclass(frozen=True)
 class MoEConfig:
@@ -81,6 +83,13 @@ class ArchConfig:
     remat_block: int = 1  # >1: two-level remat, store every Nth boundary
     optimizer: str = "adamw"  # llama3-405b overrides to adafactor
     source: str = ""  # citation
+
+    def __post_init__(self):
+        # ArchConfig flows into jit static args (step/serve closures key
+        # their trace caches on it) — an unhashable field means a
+        # retrace hazard or a TypeError at the jit boundary; fail at
+        # construction, naming the field (reprolint RL004).
+        check_hashable_fields(self)
 
     @property
     def head_dim(self) -> int:

@@ -42,6 +42,7 @@ from typing import NamedTuple, Optional, Union
 import jax.numpy as jnp
 
 from . import aggregators as _A
+from ..lint.hashguard import check_hashable_fields
 
 __all__ = [
     "Estimator",
@@ -219,3 +220,22 @@ class Estimator(NamedTuple):
         if self.method == "trimmed_mean":
             return _R.ref_trimmed_mean(flat, beta=self.beta)
         return _R.ref_vrmom(flat, K=self.K)
+
+
+# Construction-time hashability backstop (reprolint RL004): an Estimator
+# carrying an unhashable field (a list of betas, an array-valued K)
+# would fail — or worse, silently retrace — at every jit boundary it
+# keys. typing.NamedTuple forbids overriding __new__ in the class body,
+# so the guard wraps it post-definition. (NB: ``_replace`` uses the raw
+# tuple constructor and bypasses this; the trace auditor's recompile
+# guard covers that residual path.)
+_orig_new = Estimator.__new__
+
+
+def _checked_new(cls, *args, **kwargs):
+    self = _orig_new(cls, *args, **kwargs)
+    check_hashable_fields(self)
+    return self
+
+
+Estimator.__new__ = _checked_new

@@ -72,11 +72,19 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "blk_q", "blk_k",
-                                             "interpret"))
-def _flash_bh(q, k, v, causal, blk_q, blk_k, interpret):
-    """q: [BH, S, dh]; k/v: [BH, T, dh] -> [BH, S, dh]."""
+                                             "n_heads", "n_rep", "interpret"))
+def _flash_bh(q, k, v, causal, blk_q, blk_k, n_heads, n_rep, interpret):
+    """q: [B*H, S, dh]; k/v: [B*Hkv, T, dh] -> [B*H, S, dh].
+
+    GQA stays grouped on the wire: K/V arrive at Hkv heads and the K/V
+    BlockSpec index maps collapse each query head to its kv group
+    (h // n_rep), so the kernel reads the same VMEM K/V block for all
+    n_rep query heads of a group and K/V are never materialized at H
+    (reprolint RL002).
+    """
     BH, S, dh = q.shape
     T = k.shape[1]
+    n_kv = n_heads // n_rep
     blk_q = min(blk_q, S)
     blk_k = min(blk_k, T)
     pad_q = (-S) % blk_q
@@ -102,8 +110,14 @@ def _flash_bh(q, k, v, causal, blk_q, blk_k, interpret):
         grid=(BH, n_q, n_k),
         in_specs=[
             pl.BlockSpec((1, blk_q, dh), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, blk_k, dh), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, blk_k, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec(
+                (1, blk_k, dh),
+                lambda b, i, j: ((b // n_heads) * n_kv
+                                 + (b % n_heads) // n_rep, j, 0)),
+            pl.BlockSpec(
+                (1, blk_k, dh),
+                lambda b, i, j: ((b // n_heads) * n_kv
+                                 + (b % n_heads) // n_rep, j, 0)),
         ],
         out_specs=pl.BlockSpec((1, blk_q, dh), lambda b, i, j: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, Sq, dh), q.dtype),
@@ -121,21 +135,24 @@ def flash_attention(q, k, v, *, causal=True, blk_q=256, blk_k=256,
                     interpret=None):
     """q: [B, S, H, dh]; k/v: [B, T, Hkv, dh] -> [B, S, H, dh].
 
-    GQA handled by repeating kv to H (head axis folded into the grid).
-    Every shape is expressed in-kernel — non-divisible T (causal or
-    not) is covered by the static key-validity mask, so there is no
-    reference fallback. Dispatch policy (which model layers run this
-    vs the chunked jnp ``mha``) lives in ``models/attn_backend.py``.
+    GQA is handled grouped: K/V stay at Hkv heads end-to-end and the
+    grid's flat batch*head axis maps each query head to its kv group
+    via the BlockSpec index map, so K/V HBM traffic is Hkv/H of the
+    repeated layout. Every shape is expressed in-kernel — non-divisible
+    T (causal or not) is covered by the static key-validity mask, so
+    there is no reference fallback. Dispatch policy (which model layers
+    run this vs the chunked jnp ``mha``) lives in
+    ``models/attn_backend.py``.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     B, S, H, dh = q.shape
     T, Hkv = k.shape[1], k.shape[2]
-    if H != Hkv:
-        k = jnp.repeat(k, H // Hkv, axis=2)
-        v = jnp.repeat(v, H // Hkv, axis=2)
+    if H % Hkv:
+        raise ValueError(f"H={H} not a multiple of Hkv={Hkv}")
     qf = jnp.moveaxis(q, 2, 1).reshape(B * H, S, dh)
-    kf = jnp.moveaxis(k, 2, 1).reshape(B * H, T, dh)
-    vf = jnp.moveaxis(v, 2, 1).reshape(B * H, T, dh)
-    out = _flash_bh(qf, kf, vf, causal, blk_q, blk_k, bool(interpret))
+    kf = jnp.moveaxis(k, 2, 1).reshape(B * Hkv, T, dh)
+    vf = jnp.moveaxis(v, 2, 1).reshape(B * Hkv, T, dh)
+    out = _flash_bh(qf, kf, vf, causal, blk_q, blk_k, H, H // Hkv,
+                    bool(interpret))
     return jnp.moveaxis(out.reshape(B, H, S, dh), 1, 2)

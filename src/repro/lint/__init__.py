@@ -1,0 +1,36 @@
+"""reprolint — static analysis for the repro stack (DESIGN.md §10).
+
+Two layers:
+
+* **AST rules** (:mod:`repro.lint.rules`, RL0xx) — stdlib-only source
+  checks for aggregation-dispatch bypasses, GQA K/V repeats, trace-unsafe
+  Python, unhashable statics, and Pallas kernel hygiene.
+* **Trace auditor** (:mod:`repro.lint.auditor`, RL2xx) — drives the
+  public entry points through ``jax.eval_shape``/``jax.make_jaxpr``
+  without executing, verifying wire shapes/dtypes, divisibility guards,
+  the coordinatewise gate, and recompile stability.
+
+Importing this package does **not** import jax; the auditor is pulled in
+lazily so the AST layer (and ``scripts/check_docs.py``) work in minimal
+environments. CLI front door: ``python scripts/reprolint.py src tests``.
+"""
+from .catalog import ALL_IDS, AST_RULES, AUDIT_CHECKS, RuleInfo, info
+from .engine import iter_py_files, lint_file, lint_paths, lint_source
+from .findings import AuditResult, Finding, Report
+from .hashguard import UnhashableFieldError, check_hashable_fields
+from .rules import RULES, rule_ids
+
+__all__ = [
+    "ALL_IDS", "AST_RULES", "AUDIT_CHECKS", "RuleInfo", "info",
+    "iter_py_files", "lint_file", "lint_paths", "lint_source",
+    "AuditResult", "Finding", "Report",
+    "UnhashableFieldError", "check_hashable_fields",
+    "RULES", "rule_ids",
+    "run_audit",
+]
+
+
+def run_audit(*args, **kwargs):
+    """Lazy proxy for :func:`repro.lint.auditor.run_audit` (imports jax)."""
+    from .auditor import run_audit as _run
+    return _run(*args, **kwargs)

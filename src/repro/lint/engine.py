@@ -1,0 +1,138 @@
+"""Layer-1 driver: file walking, waiver parsing, rule dispatch.
+
+Waiver syntax (RL000): a finding on line L is waived by a comment on
+line L or L-1 of the form::
+
+    # reprolint: disable=RL002 DESIGN §5 — repeat keeps the head axis shardable
+
+The reason after the rule list is mandatory; a bare ``disable=RL002``
+produces an RL000 finding instead of a waiver. This layer is
+stdlib-only so it runs in environments without jax.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import os
+import re
+import tokenize
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from .findings import Finding
+from .rules import RULES, Rule
+
+__all__ = ["lint_source", "lint_file", "lint_paths", "iter_py_files"]
+
+_WAIVER_RE = re.compile(
+    r"#\s*reprolint:\s*disable=([A-Z]{2}\d{3}(?:\s*,\s*[A-Z]{2}\d{3})*)"
+    r"\s*(.*)")
+
+_SKIP_DIRS = frozenset((".git", "__pycache__", ".pytest_cache",
+                        "node_modules", ".eggs", "build", "dist"))
+
+
+def _waivers(src: str) -> dict:
+    """line -> (set of rule ids, reason, comment line no).
+
+    Scans real COMMENT tokens (not strings/docstrings), so documenting
+    the waiver syntax in prose does not register a waiver.
+    """
+    out = {}
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(src).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _WAIVER_RE.search(tok.string)
+            if m:
+                i = tok.start[0]
+                ids = {s.strip() for s in m.group(1).split(",")}
+                out[i] = (ids, m.group(2).strip(), i)
+    except tokenize.TokenError:
+        pass  # unparseable file -> handled by the ast.parse error path
+    return out
+
+
+def lint_source(src: str, relpath: str,
+                rules: Sequence[Rule] = RULES,
+                severity: str = "error") -> List[Finding]:
+    """Lint one source string. Returns findings with waivers applied and
+    RL000 findings for unexplained suppressions."""
+    findings: List[Finding] = []
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [Finding(rule_id="RL000", path=relpath,
+                        line=e.lineno or 1,
+                        message=f"file does not parse: {e.msg}",
+                        severity="error")]
+
+    waivers = _waivers(src)
+    used: set = set()
+
+    for rule in rules:
+        if not rule.applies(relpath):
+            continue
+        for f in rule.check(tree, src, relpath):
+            waiver = waivers.get(f.line) or waivers.get(f.line - 1)
+            if waiver and f.rule_id in waiver[0]:
+                ids, reason, wline = waiver
+                used.add(wline)
+                if reason:
+                    f = f._replace(waived=True, waive_reason=reason)
+                else:
+                    findings.append(Finding(
+                        rule_id="RL000", path=relpath, line=wline,
+                        message=(f"waiver for {f.rule_id} has no reason — "
+                                 f"`# reprolint: disable={f.rule_id} "
+                                 f"<why>` is required"),
+                        severity="error"))
+            if f.severity != severity and not f.waived:
+                f = f._replace(severity=severity)
+            findings.append(f)
+
+    # Waivers that never matched a finding are stale — surface them so
+    # suppressions cannot silently outlive the code they excused.
+    for wline, (ids, reason, _) in waivers.items():
+        if wline not in used:
+            findings.append(Finding(
+                rule_id="RL000", path=relpath, line=wline,
+                message=(f"stale waiver for {', '.join(sorted(ids))}: no "
+                         f"matching finding on this or the next line"),
+                severity=severity))
+
+    findings.sort(key=lambda f: (f.line, f.rule_id))
+    return findings
+
+
+def lint_file(path: str, root: str,
+              rules: Sequence[Rule] = RULES,
+              severity: str = "error") -> List[Finding]:
+    relpath = os.path.relpath(path, root).replace(os.sep, "/")
+    with open(path, "r", encoding="utf-8") as fh:
+        src = fh.read()
+    return lint_source(src, relpath, rules=rules, severity=severity)
+
+
+def iter_py_files(paths: Iterable[str], root: str) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        ap = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(ap) and ap.endswith(".py"):
+            out.append(ap)
+            continue
+        for dirpath, dirnames, filenames in os.walk(ap):
+            dirnames[:] = sorted(d for d in dirnames if d not in _SKIP_DIRS)
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    out.append(os.path.join(dirpath, fn))
+    return out
+
+
+def lint_paths(paths: Iterable[str], root: str,
+               rules: Sequence[Rule] = RULES,
+               severity: str = "error") -> List[Finding]:
+    findings: List[Finding] = []
+    for f in iter_py_files(paths, root):
+        findings.extend(lint_file(f, root, rules=rules, severity=severity))
+    return findings

@@ -107,7 +107,9 @@ def mha(q, k, v, *, causal: bool, window: Optional[int], chunk: int,
     scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32)).astype(q.dtype)
     rep = H // Hkv
     if rep > 1:
+        # reprolint: disable=RL002 DESIGN §5: TP shards the head axis; a grouped [Hkv, G] reshape of a sharded 16-head axis forces GSPMD replication, so the jnp path repeats pre-shard (flash path stays grouped)
         k = jnp.repeat(k, rep, axis=2)
+        # reprolint: disable=RL002 DESIGN §5: same head-sharding constraint as k above
         v = jnp.repeat(v, rep, axis=2)
     tp = ctx.axis_size("model")
     Hp = -(-H // tp) * tp

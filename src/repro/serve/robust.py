@@ -40,6 +40,7 @@ import jax.numpy as jnp
 
 from ..core import attacks as ATK
 from ..core.estimator import Estimator
+from ..lint.hashguard import check_hashable_fields
 from ..models import model as M
 
 __all__ = [
@@ -101,6 +102,10 @@ class RobustDecodeConfig:
             "replicated logit aggregation (serve.robust)")
         est.validate(self.m)
         object.__setattr__(self, "estimator", est)
+        # RobustDecodeConfig is a jit static arg on the decode loop — an
+        # unhashable field would retrace or TypeError at that boundary;
+        # fail here instead, naming the field (reprolint RL004).
+        check_hashable_fields(self)
 
 
 def replica_mask(m: int, alpha: float) -> jnp.ndarray:

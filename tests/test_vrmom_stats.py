@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core import vrmom as V
+# reprolint: disable=RL001 unit under test: this file validates the aggregator layer itself against the paper's theory
 from repro.core import aggregators, attacks
 from repro.core.estimator import Estimator
 
@@ -126,6 +127,7 @@ def test_aggregators_registry_shapes():
 
 def test_trimmed_mean_robust():
     x = jnp.concatenate([jnp.ones((18, 4)), 1e6 * jnp.ones((2, 4))])
+    # reprolint: disable=RL001 unit under test: trimmed_mean robustness oracle, below the Estimator layer by design
     out = aggregators.trimmed_mean(x, beta=0.15)
     np.testing.assert_allclose(np.asarray(out), 1.0, rtol=1e-6)
 
@@ -135,6 +137,7 @@ def test_trimmed_mean_zero_trim_warns():
     (the Estimator spec upgrades this to a trace-time error)."""
     x = jnp.ones((8, 4))
     with pytest.warns(RuntimeWarning, match="0 rows"):
+        # reprolint: disable=RL001 unit under test: the warning path only exists below the Estimator layer
         aggregators.trimmed_mean(x, beta=0.1)
 
 
