@@ -34,8 +34,16 @@ Emits ``BENCH_serve.json``:
         {"python_loop": {...}, "python_loop_async": {...}, "scan":
         {...}}}, "flash": {...}},
      "speedup_scan_vs_loop_b4": ..., "speedup_flash_vs_jnp_decode_b4":
-     ..., "robust": {"m": 8, "aggregator": "vrmom", "attn_backend":
-     "flash", "tok_s": ..., "overhead_x": ...}}
+     ..., "latency": {"ttft_s": {"p50": ..., "p95": ..., "p99": ...},
+     "decode_step_s": {"p50": ..., "p95": ..., "p99": ...}},
+     "robust": {"m": 8, "aggregator": "vrmom", "attn_backend": "flash",
+     "tok_s": ..., "overhead_x": ..., "obs_overhead_x": ...,
+     "obs_tokens_identical": true, "replica_disagreement": {...}}}
+
+The latency percentiles come from ``repro.obs`` histograms recorded
+under the same metric names the example CLI emits (``serve.ttft_s`` /
+``serve.decode_step_s``), and ``--metrics-out`` appends the raw
+registry snapshots to a telemetry JSONL for ``scripts/metrics_dump.py``.
 
   PYTHONPATH=src python -m benchmarks.serve [--arch qwen3-1.7b]
       [--tokens 16] [--batches 1,4,8] [--out BENCH_serve.json]
@@ -108,6 +116,9 @@ def main() -> None:
                          "stays comparable across the committed history "
                          "of BENCH_serve.json")
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--metrics-out", default=None,
+                    help="append the obs registry snapshots to this "
+                         "telemetry JSONL (obs.sinks wire format)")
     args = ap.parse_args()
 
     import jax
@@ -116,6 +127,8 @@ def main() -> None:
 
     from repro.configs import get as get_arch
     from repro.models import model as M
+    from repro.obs import JsonlSink, MetricsRegistry
+    from repro.obs.metrics import now
     from repro.serve import RobustDecodeConfig, ServeEngine
     from repro.serve.engine import GREEDY
 
@@ -208,6 +221,44 @@ def main() -> None:
         result["speedup_flash_vs_jnp_decode_b4"] = (
             scan_b4 / result["backends"]["jnp"]["decode_tok_s"]["scan"][b4])
 
+    # latency percentiles (DESIGN.md §11): TTFT (prefill + first token,
+    # the generate(·, 1) path) and per-token decode-step time, recorded
+    # into the SAME obs histograms/metric names examples/serve.py uses —
+    # percentile fields in BENCH_serve.json come from obs.Histogram, so
+    # the CLI and the benchmark are bit-compatible telemetry producers.
+    reg = MetricsRegistry()
+    PB = 4 if 4 in batches else batches[0]
+    pbatch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (PB, args.prompt_len), 0, cfg.vocab)}
+    lat_reps = max(args.reps * 4, 16)
+    np.asarray(eng.generate(pbatch, 1))  # warm (prefill + first-token jits)
+    for _ in range(lat_reps):
+        t0 = now()
+        np.asarray(eng.generate(pbatch, 1))
+        reg.observe("serve.ttft_s", now() - t0)
+    logits0, caches0 = jax.block_until_ready(eng.prefill(pbatch))
+    tok0 = jnp.argmax(logits0, axis=-1).astype(jnp.int32)
+    loop_fn = eng._decode_loop_fn(N - 1, GREEDY, pool=False)
+    jax.block_until_ready(loop_fn(params, caches0, tok0,
+                                  jax.random.PRNGKey(0))[0])
+    for _ in range(lat_reps):
+        t0 = now()
+        jax.block_until_ready(loop_fn(params, caches0, tok0,
+                                      jax.random.PRNGKey(0))[0])
+        reg.observe("serve.decode_step_s", (now() - t0) / (N - 1))
+    result["latency"] = {
+        "backend": best, "batch": PB, "samples": lat_reps,
+        "ttft_s": {f"p{int(q*100)}": reg.histograms["serve.ttft_s"]
+                   .percentile(q) for q in (0.5, 0.95, 0.99)},
+        "decode_step_s": {f"p{int(q*100)}":
+                          reg.histograms["serve.decode_step_s"]
+                          .percentile(q) for q in (0.5, 0.95, 0.99)},
+    }
+    print(f"serve_ttft_p50_{best}_b{PB},"
+          f"{result['latency']['ttft_s']['p50'] * 1e6:.6g},")
+    print(f"serve_decode_step_p50_{best}_b{PB},"
+          f"{result['latency']['decode_step_s']['p50'] * 1e6:.6g},")
+
     # robust replicated decode overhead (full generate path, batch 4) on
     # the fused backend: kernel attention + kernel aggregation in-scan
     B, RN, RPL = 4, args.robust_tokens, args.robust_prompt_len
@@ -229,6 +280,54 @@ def main() -> None:
     }
     print(f"serve_robust_m{args.replicas},{t_rob * 1e6:.6g},"
           f"{t_rob / t_plain:.6g}")
+
+    # telemetry overhead (acceptance gate: < 5%): the same robust
+    # engine with an obs registry runs a distinct compiled loop whose
+    # only extra work is the in-scan disagreement histogram aux + one
+    # host drain per dispatch. Tokens must stay bit-identical.
+    obs_reg = MetricsRegistry()
+    oeng = ServeEngine(cfg, params, max_len=rmax_len, attn_backend=best,
+                       robust=RobustDecodeConfig(m=args.replicas,
+                                                 estimator=args.aggregator),
+                       obs=obs_reg)
+    t_off, t_on = _time_ratio(
+        lambda: jax.block_until_ready(reng.generate(batch, RN)),
+        lambda: jax.block_until_ready(oeng.generate(batch, RN)),
+        max(args.reps, 8))
+    toks_off = np.asarray(reng.generate(batch, RN))
+    toks_on = np.asarray(oeng.generate(batch, RN))
+    result["robust"]["obs_overhead_x"] = t_on / t_off
+    result["robust"]["obs_tokens_identical"] = bool(
+        np.array_equal(toks_off, toks_on))
+    print(f"serve_robust_obs_m{args.replicas},{t_on * 1e6:.6g},"
+          f"{t_on / t_off:.6g}")
+
+    # live Byzantine signal: replica disagreement under a signflip
+    # attack at alpha=0.25 — floor(0.25 * m) corrupted replicas out of
+    # m should put the mean per-token disagreement rate near alpha.
+    areg = MetricsRegistry()
+    aeng = ServeEngine(cfg, params, max_len=rmax_len, attn_backend=best,
+                       robust=RobustDecodeConfig(m=args.replicas,
+                                                 estimator=args.aggregator,
+                                                 attack="signflip",
+                                                 alpha=0.25),
+                       obs=areg)
+    np.asarray(aeng.generate(batch, RN))
+    hd = areg.histograms["serve.replica_disagreement"]
+    result["robust"]["replica_disagreement"] = {
+        "attack": "signflip", "alpha": 0.25,
+        "mean": hd.mean, "count": hd.count,
+    }
+    print(f"serve_replica_disagreement_m{args.replicas},,{hd.mean:.6g}")
+
+    if args.metrics_out:
+        with JsonlSink(args.metrics_out) as sink:
+            sink.write_registry(reg, source="benchmarks.serve",
+                                section="latency", arch=cfg.name)
+            sink.write_registry(obs_reg, source="benchmarks.serve",
+                                section="robust", arch=cfg.name)
+            sink.write_registry(areg, source="benchmarks.serve",
+                                section="robust-attacked", arch=cfg.name)
 
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)

@@ -7,6 +7,12 @@ throughput (the first call of each jitted program pays tracing + XLA
 compilation; timing it together with decode used to overstate the
 per-token cost by orders of magnitude).
 
+All timings go through ``repro.obs`` (DESIGN.md §11) under the same
+metric names ``benchmarks/serve.py`` records — ``serve.compile_s``,
+``serve.ttft_s``, ``serve.decode_step_s`` — and ``--metrics-out FILE``
+appends the registry snapshot as telemetry JSONL for
+``scripts/metrics_dump.py``.
+
   PYTHONPATH=src python examples/serve.py --arch mixtral-8x7b --tokens 16
   PYTHONPATH=src python examples/serve.py --robust --attack signflip
   PYTHONPATH=src python examples/serve.py --scheduler --requests 6
@@ -17,13 +23,14 @@ if "XLA_FLAGS" not in os.environ:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get as get_arch
+from repro.obs import JsonlSink, MetricsRegistry
+from repro.obs.metrics import now
 from repro.serve import (GREEDY, Request, RobustDecodeConfig, Sampling,
                          Scheduler, ServeEngine)
 from repro.models import model as M
@@ -43,29 +50,41 @@ def build_batch(cfg, batch, prompt_len):
     return out
 
 
-def run_batch(engine, cfg, args, sampling):
+def run_batch(engine, cfg, args, sampling, reg):
     batch = build_batch(cfg, args.batch, args.prompt_len)
 
-    t0 = time.time()
-    gen = jax.block_until_ready(engine.generate(batch, args.tokens,
-                                                sampling=sampling))
-    t_cold = time.time() - t0  # includes prefill + decode compile
+    # compile + first call — a gauge, not a histogram: one value per run
+    with reg.timer("serve.compile_s", kind="gauge"):
+        gen = jax.block_until_ready(engine.generate(batch, args.tokens,
+                                                    sampling=sampling))
+    t_cold = reg.gauges["serve.compile_s"]
 
-    t0 = time.time()
+    # TTFT: prefill + first sampled token (everything is warm now)
+    t0 = now()
+    jax.block_until_ready(engine.generate(batch, 1, sampling=sampling))
+    ttft = now() - t0
+    reg.observe("serve.ttft_s", ttft)
+
+    t0 = now()
     gen = jax.block_until_ready(engine.generate(batch, args.tokens,
                                                 sampling=sampling))
-    t_warm = time.time() - t0
+    t_warm = now() - t0
     tok_s = args.tokens * args.batch / max(t_warm, 1e-9)
+    # steady-state per-token decode cost: the warm call minus its
+    # prefill/first-token part, over the scanned tokens
+    reg.observe("serve.decode_step_s",
+                max(t_warm - ttft, 0.0) / max(args.tokens - 1, 1))
 
     print(f"{cfg.name}: {args.batch}x{args.prompt_len} prompt, "
           f"{args.tokens} new tokens/seq")
     print(f"  compile+first call: {t_cold:.2f}s   "
-          f"steady-state: {t_warm:.3f}s ({tok_s:.1f} tok/s)")
+          f"steady-state: {t_warm:.3f}s ({tok_s:.1f} tok/s)   "
+          f"ttft: {ttft * 1e3:.1f}ms")
     print("  generated ids[0]:", list(map(int, gen[0])))
     assert bool(jnp.all(gen >= 0)) and bool(jnp.all(gen < cfg.vocab))
 
 
-def run_scheduler(engine, cfg, args, sampling):
+def run_scheduler(engine, cfg, args, sampling, reg):
     sched = Scheduler(engine, decode_block=args.decode_block,
                       sampling=sampling)
     rs = np.random.RandomState(0)
@@ -81,9 +100,9 @@ def run_scheduler(engine, cfg, args, sampling):
             tokens=rs.randint(0, cfg.vocab,
                               size=(args.prompt_len + 2 * i,)),
             max_new_tokens=args.tokens, extras=extras))
-    t0 = time.time()
+    t0 = now()
     done = sched.run()
-    dt = time.time() - t0
+    dt = now() - t0
     n_tok = sum(len(c.tokens) for c in done.values())
     print(f"{cfg.name}: {args.requests} requests through "
           f"{engine.n_slots} slots (block={args.decode_block}) in {dt:.2f}s "
@@ -92,6 +111,17 @@ def run_scheduler(engine, cfg, args, sampling):
         c = done[uid]
         print(f"  req {uid}: prompt {len(c.prompt)} -> {len(c.tokens)} "
               f"tokens ({c.finished_by})")
+    # the scheduler recorded admit/retire counters + TTFT / decode-step
+    # histograms into the engine's registry as it ran (DESIGN.md §11)
+    snap = reg.snapshot()
+    cnt = snap["counters"]
+    h = reg.histograms.get("serve.decode_step_s")
+    extra = (f"  decode_step p50={h.percentile(0.5) * 1e3:.2f}ms "
+             f"p95={h.percentile(0.95) * 1e3:.2f}ms" if h and h.count else "")
+    print(f"  obs: admitted={cnt.get('serve.admitted', 0):.0f} "
+          f"retired={cnt.get('serve.retired', 0):.0f} "
+          f"rejected={cnt.get('serve.rejected', 0):.0f} "
+          f"tokens_out={cnt.get('serve.tokens_out', 0):.0f}\n" + extra)
 
 
 def main():
@@ -118,6 +148,9 @@ def main():
     ap.add_argument("--attn-backend", default=None,
                     choices=("auto", "jnp", "flash"),
                     help="attention backend override (DESIGN.md §8)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="append the obs registry snapshot to this "
+                         "telemetry JSONL (obs.sinks wire format)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch).reduced()
@@ -139,13 +172,22 @@ def main():
         print(f"robust decode: m={args.replicas} {args.aggregator}, "
               f"attack={args.attack} alpha={args.alpha}")
 
+    reg = MetricsRegistry()
     max_len = args.prompt_len + 2 * args.requests + args.tokens + 8
     engine = ServeEngine(cfg, params, max_len=max_len, n_slots=args.slots,
-                         robust=robust, attn_backend=args.attn_backend)
+                         robust=robust, attn_backend=args.attn_backend,
+                         obs=reg)
     if args.scheduler:
-        run_scheduler(engine, cfg, args, sampling)
+        run_scheduler(engine, cfg, args, sampling, reg)
     else:
-        run_batch(engine, cfg, args, sampling)
+        run_batch(engine, cfg, args, sampling, reg)
+    if args.metrics_out:
+        with JsonlSink(args.metrics_out) as sink:
+            sink.write_registry(reg, source="examples.serve", arch=cfg.name,
+                                robust=bool(robust),
+                                mode="scheduler" if args.scheduler
+                                else "batch")
+        print(f"metrics appended to {args.metrics_out}")
 
 
 if __name__ == "__main__":

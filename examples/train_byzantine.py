@@ -15,7 +15,6 @@ if "XLA_FLAGS" not in os.environ:
 
 import argparse
 import dataclasses
-import time
 
 import jax
 import numpy as np
@@ -25,6 +24,8 @@ from repro.configs import get as get_arch
 from repro.data import lm_batch, shard_batch
 from repro.dist import sharding as S
 from repro.models import model as M
+from repro.obs import JsonlSink, MetricsRegistry
+from repro.obs.metrics import now
 from repro.train.step import make_train_step
 
 
@@ -37,27 +38,54 @@ def build_cfg(d_model, layers, vocab=8192):
         compute_dtype="float32", attn_chunk=128, loss_chunk=256, remat=False)
 
 
-def run(cfg, mesh, *, steps, aggregator, byz, attack, seq, batch, lr, log):
+def run(cfg, mesh, *, steps, aggregator, byz, attack, seq, batch, lr, log,
+        reg=None):
+    """``reg``: optional obs.MetricsRegistry — builds the step with
+    ``with_diag=True`` and records the per-worker suspicion diagnostics
+    (alpha-hat, suspected count, pre/post gradient norms) plus step time
+    and loss after each step. The diag aux rides the same jitted step —
+    no extra dispatches."""
+    with_diag = reg is not None
     setup = make_train_step(cfg, mesh, estimator=aggregator,
                             mode="stacked-rrs" if aggregator != "mean"
                             else "mean",
                             byzantine_frac=byz, attack=attack, lr=lr,
-                            microbatch=1)
+                            microbatch=1, with_diag=with_diag)
     opt = O.get(cfg.optimizer, lr=lr)
     params = M.init(jax.random.PRNGKey(0), cfg)
     params = jax.device_put(params, S.to_named(mesh, setup.params_specs))
     opt_state = jax.jit(opt.init)(params)
     step = jax.jit(setup.step_fn)
     losses = []
-    t0 = time.time()
+    t0 = now()
     for i in range(steps):
         b = shard_batch(lm_batch(cfg, i, batch, seq), mesh, setup.batch_axes)
-        params, opt_state, loss = step(params, opt_state, b,
-                                       jax.random.PRNGKey(i))
-        losses.append(float(loss))
+        ts = now()
+        if with_diag:
+            params, opt_state, loss, diag = step(params, opt_state, b,
+                                                 jax.random.PRNGKey(i))
+        else:
+            params, opt_state, loss = step(params, opt_state, b,
+                                           jax.random.PRNGKey(i))
+        losses.append(float(loss))  # blocks: device work for step i done
+        if with_diag:
+            reg.observe("train.step_s", now() - ts)
+            reg.gauge("train.loss", losses[-1])
+            reg.gauge("agg.alpha_hat", float(diag.alpha_hat))
+            reg.gauge("agg.suspected_workers",
+                      float(np.asarray(diag.suspected).sum()))
+            reg.gauge("agg.grad_norm_pre",
+                      float(np.asarray(diag.pre_norms).mean()))
+            reg.gauge("agg.grad_norm_post", float(diag.post_norm))
         if i % log == 0 or i == steps - 1:
+            diag_note = ""
+            if with_diag:
+                diag_note = (f" alpha_hat={reg.gauges['agg.alpha_hat']:.3f}"
+                             f" suspected="
+                             f"{reg.gauges['agg.suspected_workers']:.0f}")
             print(f"  [{aggregator:6s} byz={byz:.2f}] step {i:4d} "
-                  f"loss {losses[-1]:.4f} ({(time.time()-t0)/(i+1):.2f}s/it)")
+                  f"loss {losses[-1]:.4f} ({(now()-t0)/(i+1):.2f}s/it)"
+                  + diag_note)
     return losses
 
 
@@ -78,6 +106,9 @@ def main():
     #  4x2 host mesh; the paper uses floor(alpha*m) the same way)
     ap.add_argument("--attack", default="omniscient")
     ap.add_argument("--log-every", type=int, default=20)
+    ap.add_argument("--metrics-out", default=None,
+                    help="append the obs registry snapshot to this "
+                         "telemetry JSONL (obs.sinks wire format)")
     args = ap.parse_args()
 
     n = len(jax.devices())
@@ -89,12 +120,21 @@ def main():
 
     common = dict(steps=args.steps, attack=args.attack, seq=args.seq,
                   batch=args.batch, lr=args.lr, log=args.log_every)
+    reg = MetricsRegistry()
     print("== clean baseline (VRMOM, no Byzantine) ==")
     l_clean = run(cfg, mesh, aggregator="vrmom", byz=0.0, **common)
-    print(f"== VRMOM under {args.byzantine:.0%} Byzantine ==")
-    l_vr = run(cfg, mesh, aggregator="vrmom", byz=args.byzantine, **common)
+    print(f"== VRMOM under {args.byzantine:.0%} Byzantine "
+          f"(with diagnostics) ==")
+    l_vr = run(cfg, mesh, aggregator="vrmom", byz=args.byzantine,
+               reg=reg, **common)
     print(f"== mean under {args.byzantine:.0%} Byzantine ==")
     l_mean = run(cfg, mesh, aggregator="mean", byz=args.byzantine, **common)
+    if args.metrics_out:
+        with JsonlSink(args.metrics_out) as sink:
+            sink.write_registry(reg, source="examples.train_byzantine",
+                                arch=cfg.name, attack=args.attack,
+                                byzantine=args.byzantine)
+        print(f"metrics appended to {args.metrics_out}")
 
     print("\nfinal losses: clean-vrmom %.4f | byz-vrmom %.4f | byz-mean %s"
           % (l_clean[-1], l_vr[-1],

@@ -116,6 +116,34 @@ def check_rule_table(design: Path):
     return errors
 
 
+def check_metric_table(design: Path):
+    """DESIGN.md §11 metric rows must match repro.obs.catalog exactly:
+    every cataloged metric documented with its kind, no stale names."""
+    from repro.obs.catalog import METRICS
+
+    registered = {m.name: m.kind for m in METRICS}
+    row_re = re.compile(r"^\|\s*`([\w.\-]+)`\s*\|\s*(\w+)\s*\|")
+    documented = {}
+    for _, line in _strip_fences(design.read_text()):
+        m = row_re.match(line.strip())
+        if m and "." in m.group(1):
+            documented[m.group(1)] = m.group(2)
+
+    errors = []
+    for name, kind in registered.items():
+        if name not in documented:
+            errors.append(f"DESIGN.md §11: cataloged metric {name} "
+                          f"missing from the metric table")
+        elif documented[name] != kind:
+            errors.append(f"DESIGN.md §11: {name} documented as kind "
+                          f"{documented[name]!r} but cataloged as {kind!r}")
+    for name in documented:
+        if name not in registered:
+            errors.append(f"DESIGN.md §11: table row {name} has no "
+                          f"entry in repro.obs.catalog")
+    return errors
+
+
 def main(argv):
     root = Path(__file__).resolve().parent.parent
     files = [root / a for a in argv] if argv else [root / "README.md",
@@ -131,6 +159,9 @@ def main(argv):
             errors.extend(check_rule_table(md))
             print("checked DESIGN.md §10 rule table against "
                   "repro.lint.catalog")
+            errors.extend(check_metric_table(md))
+            print("checked DESIGN.md §11 metric table against "
+                  "repro.obs.catalog")
     if errors:
         print("\nBROKEN LINKS:")
         for e in errors:

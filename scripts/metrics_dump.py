@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Metrics JSONL -> merged summary / Prometheus text (DESIGN.md §11).
+
+Every telemetry producer in the repo — benchmarks/serve.py, the example
+runners, launch/dryrun.py's HLO cost summaries — appends records to a
+shared JSONL file via ``repro.obs.sinks.JsonlSink``. This CLI folds such
+a file back into one summary (counters sum, gauges last-wins, histograms
+merge on matching edges) and renders it:
+
+    python scripts/metrics_dump.py metrics.jsonl                # prometheus
+    python scripts/metrics_dump.py metrics.jsonl --format json
+    python scripts/metrics_dump.py metrics.jsonl --out metrics.prom
+    python scripts/metrics_dump.py a.jsonl b.jsonl              # multi-file
+
+Percentile summaries of every histogram ride along as synthetic gauges
+(``<name>_p50`` / ``_p95`` / ``_p99``) unless ``--no-percentiles``.
+
+Stdlib-only (the obs host layer imports no jax): usable in docs CI and
+on machines without the accelerator stack.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from repro.obs.metrics import Histogram  # noqa: E402
+from repro.obs.sinks import (merge_records, prometheus_text,  # noqa: E402
+                             read_jsonl)
+
+
+def summarize(paths, percentiles=(0.5, 0.95, 0.99)) -> dict:
+    records = []
+    for p in paths:
+        records.extend(read_jsonl(p))
+    summary = merge_records(records)
+    for name, snap in summary["histograms"].items():
+        h = Histogram.from_snapshot(snap)
+        if h.count == 0:
+            continue
+        for q in percentiles:
+            summary["gauges"][f"{name}_p{int(q * 100)}"] = h.percentile(q)
+    return summary
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="metrics_dump", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("paths", nargs="+", help="metrics JSONL file(s)")
+    ap.add_argument("--format", choices=("prometheus", "json"),
+                    default="prometheus")
+    ap.add_argument("--out", default=None, help="write here instead of stdout")
+    ap.add_argument("--no-percentiles", action="store_true",
+                    help="skip the synthetic p50/p95/p99 gauges")
+    args = ap.parse_args(argv)
+
+    for p in args.paths:
+        if not os.path.isfile(p):
+            print(f"metrics_dump: no such file: {p}", file=sys.stderr)
+            return 2
+    summary = summarize(args.paths,
+                        percentiles=() if args.no_percentiles
+                        else (0.5, 0.95, 0.99))
+    if args.format == "json":
+        text = json.dumps(summary, indent=2, sort_keys=True) + "\n"
+    else:
+        text = prometheus_text(summary)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+    else:
+        sys.stdout.write(text)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -197,6 +197,21 @@ class Estimator(NamedTuple):
                                    beta=self.beta, interpret=self.interpret)
         return out.reshape(shape)
 
+    def apply_with_diag(self, x, axis: int = 0):
+        """``apply`` plus per-worker diagnostics (DESIGN.md §11).
+
+        Returns ``(aggregate, obs.diag.AggDiagnostics)``: the aggregate
+        is bit-identical to ``apply(x, axis)`` (the diag pass reads the
+        stack, it never feeds back), and the diagnostics are fixed-shape
+        arrays safe as jit aux outputs — per-worker deviation scores, a
+        suspected-Byzantine mask, the online effective-alpha estimate,
+        and pre/post-aggregation norms.
+        """
+        from ..obs import diag as _D
+
+        agg = self.apply(x, axis)
+        return agg, _D.diagnose(x, agg, axis=axis)
+
     def _apply_jnp(self, x, axis: int):
         if self.method == "mean":
             return _A.mean(x, axis=axis)

@@ -48,6 +48,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core.estimator import Estimator
+from ..obs.trace import named_span
 from . import ctx as CTX
 
 __all__ = [
@@ -90,13 +91,29 @@ def _canonical_stacked_spec(shape, mesh, worker_axes):
     return P(wa if wa else None, *entries)
 
 
+def _with_tree_diag(grads, out):
+    """Attach ``obs.diag`` statistics to an aggregated pytree.
+
+    Computed jit-natively from the stacked tree against the aggregate
+    (GSPMD reduces the per-leaf sums over whatever sharding the leaves
+    carry — worker and model shards alike), so the same diag path
+    serves every aggregation mode and never touches the RRS wire."""
+    from ..obs import diag as OD
+
+    with named_span("obs.tree_diagnose"):
+        return out, OD.tree_diagnose(grads, out)
+
+
 def aggregate_stacked_rrs(grads, mesh, worker_axes,
-                          est: EstimatorLike = "vrmom", *, specs=None):
+                          est: EstimatorLike = "vrmom", *, specs=None,
+                          with_diag: bool = False):
     """Robust-Reduce-Scatter of a stacked-gradient pytree.
 
     ``grads``: pytree whose leaves are ``[n_workers, *param_shape]``,
     dim 0 sharded over ``worker_axes``. Returns the aggregated pytree
-    with the worker dim removed.
+    with the worker dim removed; with ``with_diag`` a
+    ``(pytree, obs.diag.AggDiagnostics)`` pair — fixed-shape suspicion
+    scores / mask / alpha-hat / norms safe as jit aux outputs.
 
     Wire format (DESIGN.md §3): each worker shard's leaves are raveled
     to f32, concatenated in pytree-flatten order, and zero-padded to a
@@ -107,7 +124,7 @@ def aggregate_stacked_rrs(grads, mesh, worker_axes,
     worker_axes = tuple(worker_axes)
     nw = _n_workers(mesh, worker_axes)
     if nw <= 1:
-        return aggregate_stacked_auto(grads, est)
+        return aggregate_stacked_auto(grads, est, with_diag=with_diag)
 
     leaves, treedef = jax.tree.flatten(grads)
     if specs is not None:
@@ -131,8 +148,9 @@ def aggregate_stacked_rrs(grads, mesh, worker_axes,
             flat = jnp.pad(flat, ((0, 0), (0, pad)))
         # [W_loc, n_p] -> [W, n_p/W]: every worker rank now holds all
         # workers' values for its own coordinate slice.
-        swapped = jax.lax.all_to_all(flat, worker_axes, split_axis=1,
-                                     concat_axis=0, tiled=True)
+        with named_span("rrs.all_to_all"):
+            swapped = jax.lax.all_to_all(flat, worker_axes, split_axis=1,
+                                         concat_axis=0, tiled=True)
         agg = est.apply(swapped, axis=0)
         full = jax.lax.all_gather(agg, worker_axes, axis=0, tiled=True)
         if pad:
@@ -148,10 +166,14 @@ def aggregate_stacked_rrs(grads, mesh, worker_axes,
     agg_leaves = shard_map(
         local_rrs, mesh=mesh, in_specs=tuple(in_specs),
         out_specs=tuple(out_specs), check_rep=False)(*leaves)
-    return jax.tree.unflatten(treedef, agg_leaves)
+    out = jax.tree.unflatten(treedef, agg_leaves)
+    if with_diag:
+        return _with_tree_diag(jax.tree.unflatten(treedef, leaves), out)
+    return out
 
 
-def aggregate_stacked_auto(grads, est: EstimatorLike = "vrmom"):
+def aggregate_stacked_auto(grads, est: EstimatorLike = "vrmom", *,
+                           with_diag: bool = False):
     """jit-native equivalent of ``aggregate_stacked_rrs``: the same
     coordinate-wise estimator per leaf, sharding left to GSPMD."""
     est = _wire_estimator(est)
@@ -161,7 +183,10 @@ def aggregate_stacked_auto(grads, est: EstimatorLike = "vrmom"):
         out = est.apply(flat, axis=0)
         return out.reshape(g.shape[1:]).astype(g.dtype)
 
-    return jax.tree.map(one, grads)
+    out = jax.tree.map(one, grads)
+    if with_diag:
+        return _with_tree_diag(grads, out)
+    return out
 
 
 def aggregate_symmetric_stacked(mats, est: EstimatorLike = "vrmom"):
@@ -189,21 +214,29 @@ def aggregate_symmetric_stacked(mats, est: EstimatorLike = "vrmom"):
 
 
 def aggregate(grads, mesh, worker_axes, *, mode: str = "stacked-rrs",
-              est: EstimatorLike = "vrmom", specs=None):
+              est: EstimatorLike = "vrmom", specs=None,
+              with_diag: bool = False):
     """Mode dispatcher used by ``train/step.py``.
 
     ``stacked-rrs`` — shard_map RRS; ``stacked-auto`` — jit-native;
     ``mean`` — plain mean over the worker dim (the non-robust baseline).
+    ``with_diag`` returns ``(aggregate, obs.diag.AggDiagnostics)`` for
+    every mode (the mean baseline's suspicion scores are still defined —
+    deviation from the mean — which is what makes its non-robustness
+    visible in the telemetry).
     """
     if mode == "stacked-rrs":
         return aggregate_stacked_rrs(grads, mesh, worker_axes, est,
-                                     specs=specs)
+                                     specs=specs, with_diag=with_diag)
     if mode in ("stacked-auto", "auto"):
-        return aggregate_stacked_auto(grads, est)
+        return aggregate_stacked_auto(grads, est, with_diag=with_diag)
     if mode == "mean":
-        return jax.tree.map(
+        out = jax.tree.map(
             lambda g: jnp.mean(g.astype(jnp.float32), axis=0).astype(g.dtype),
             grads)
+        if with_diag:
+            return _with_tree_diag(grads, out)
+        return out
     raise ValueError(f"unknown aggregation mode {mode!r}")
 
 

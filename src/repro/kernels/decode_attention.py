@@ -234,5 +234,8 @@ def decode_attention(q, k, v, *, kv_len=None, blk_k=None, interpret=None):
         kv_len = jnp.asarray(kv_len, jnp.int32)
         lens = jnp.broadcast_to(kv_len, (B,))
     lens = jnp.minimum(lens, T)
-    out = _decode_grouped(qg, k, v, lens, int(blk_k), bool(interpret))
+    from ..obs.trace import named_span
+
+    with named_span("kernels.decode_attention"):
+        out = _decode_grouped(qg, k, v, lens, int(blk_k), bool(interpret))
     return out.reshape(B, 1, H, dh)

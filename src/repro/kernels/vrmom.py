@@ -182,8 +182,11 @@ def aggregate_pallas(x, method: str = "vrmom", K: int = 10, beta: float = 0.1,
                 f"(Estimator.validate) before dispatch")
     shape = x.shape[1:]
     x2 = x.reshape(m, -1)
-    out = _agg_2d(x2, method=method, K=K, k_trim=k_trim, tile=tile,
-                  interpret=bool(interpret), eps=eps)
+    from ..obs.trace import named_span
+
+    with named_span("kernels.aggregate"):
+        out = _agg_2d(x2, method=method, K=K, k_trim=k_trim, tile=tile,
+                      interpret=bool(interpret), eps=eps)
     return out.reshape(shape)
 
 

@@ -252,6 +252,30 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     return result
 
 
+def write_metrics_jsonl(res: dict, path: str) -> None:
+    """Append one ``kind: "dryrun"`` record to the shared telemetry
+    JSONL (DESIGN.md §11): the HLO cost summary as ``launch.*`` gauges —
+    so ``scripts/metrics_dump.py`` folds compile-time costs into the
+    same Prometheus exposition as the runtime serve/train metrics — plus
+    the full result dict for ``launch/report.py``."""
+    from repro.obs.sinks import JsonlSink
+
+    with JsonlSink(path) as sink:
+        sink.write({
+            "kind": "dryrun",
+            "gauges": {
+                "launch.compile_flops": res["flops_per_chip"],
+                "launch.compile_hbm_bytes": res["hbm_bytes_per_chip"],
+                "launch.compile_collective_bytes":
+                    res["collective_bytes_per_chip"],
+                "launch.compile_peak_memory_bytes": res["peak_memory_bytes"],
+            },
+            "meta": {"arch": res["arch"], "shape": res["shape"],
+                     "mesh": res["mesh"], "mode": res["mode"]},
+            "result": res,
+        })
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -260,6 +284,9 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--mode", default="stacked-rrs")
     ap.add_argument("--json", default=None)
+    ap.add_argument("--metrics-jsonl", default=None,
+                    help="append the cost summary to this telemetry JSONL "
+                    "(obs.sinks wire format)")
     ap.add_argument("--save-hlo", default=None)
     args = ap.parse_args()
     res = dryrun_one(args.arch, args.shape, multi_pod=args.multi_pod,
@@ -267,6 +294,8 @@ def main():
     if args.json:
         with open(args.json, "w") as f:
             json.dump(res, f, indent=1)
+    if args.metrics_jsonl:
+        write_metrics_jsonl(res, args.metrics_jsonl)
 
 
 if __name__ == "__main__":

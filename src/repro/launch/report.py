@@ -26,6 +26,23 @@ def load(dir_):
     return out
 
 
+def load_jsonl(path):
+    """Dry-run results from the shared telemetry JSONL (DESIGN.md §11):
+    ``kind: "dryrun"`` records carry the full result dict alongside
+    their ``launch.*`` gauges, so one artifact feeds both this report
+    and ``scripts/metrics_dump.py``. Later records win (rerun = update).
+    """
+    from repro.obs.sinks import read_jsonl
+
+    out = {}
+    for rec in read_jsonl(path):
+        if rec.get("kind") != "dryrun" or "result" not in rec:
+            continue
+        d = rec["result"]
+        out[(d["arch"], d["shape"], d["mesh"])] = d
+    return out
+
+
 def fmt_s(x):
     if x == 0:
         return "0"
@@ -85,10 +102,16 @@ def multipod_status(res):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--jsonl", default=None,
+                    help="also load dryrun records from this telemetry "
+                    "JSONL (obs.sinks wire format); overrides --dir dupes")
     ap.add_argument("--md", action="store_true")
     args = ap.parse_args()
     res = load(args.dir)
-    print(f"# loaded {len(res)} results from {args.dir}\n")
+    if args.jsonl:
+        res.update(load_jsonl(args.jsonl))
+    print(f"# loaded {len(res)} results from {args.dir}"
+          f"{' + ' + args.jsonl if args.jsonl else ''}\n")
     print("## Roofline (single-pod 16x16, per chip)\n")
     print(roofline_table(res, "16x16", md=args.md))
     print("\n## Multi-pod (2x16x16) compile status\n")

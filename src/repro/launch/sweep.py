@@ -10,7 +10,8 @@ import json
 import os
 import subprocess
 import sys
-import time
+
+from repro.obs.metrics import now
 
 ARCHS = ["qwen3-1.7b", "mamba2-2.7b", "granite-moe-3b-a800m", "minitron-4b",
          "phi-3-vision-4.2b", "whisper-medium", "starcoder2-7b",
@@ -37,7 +38,7 @@ def run_one(arch, shape, multi, out_dir, timeout=2400):
         cmd.append("--multi-pod")
     env = dict(os.environ)
     env.setdefault("PYTHONPATH", "src")
-    t0 = time.time()
+    t0 = now()
     try:
         r = subprocess.run(cmd, capture_output=True, text=True, env=env,
                            timeout=timeout)
@@ -49,7 +50,7 @@ def run_one(arch, shape, multi, out_dir, timeout=2400):
         with open(path + ".err", "w") as f:
             f.write(r.stdout[-3000:] + "\n=== STDERR ===\n" + r.stderr[-6000:])
         return "failed", path
-    return f"ok({time.time()-t0:.0f}s)", path
+    return f"ok({now()-t0:.0f}s)", path
 
 
 def main():

@@ -11,7 +11,6 @@ mesh on a pod. For the 512-device compile-only path use dryrun.py.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
@@ -23,6 +22,7 @@ from repro.data import lm_batch, shard_batch
 from repro.dist import sharding as S
 from repro.models import model as M
 from repro.core.estimator import Estimator
+from repro.obs.metrics import now
 from repro.train.step import make_train_step
 
 
@@ -77,14 +77,14 @@ def main():
           f"workers={setup.n_workers} aggregator={args.aggregator} "
           f"mode={args.mode} byzantine={args.byzantine} attack={args.attack}")
 
-    t0 = time.time()
+    t0 = now()
     for i in range(args.steps):
         batch = shard_batch(lm_batch(cfg, i, args.batch, args.seq), mesh,
                             setup.batch_axes)
         params, opt_state, loss = step(params, opt_state, batch,
                                        jax.random.PRNGKey(i))
         if i % args.log_every == 0 or i == args.steps - 1:
-            dt = time.time() - t0
+            dt = now() - t0
             print(f"step {i:4d} loss {float(loss):.4f} "
                   f"({dt/(i+1):.2f} s/step)")
     if args.checkpoint:

@@ -69,6 +69,14 @@ AST_RULES = (
         "broadcasted_iota), per the flash/decode-attention mask "
         "discipline.",
         "DESIGN §8 (PR 4 pad_k fix)"),
+    RuleInfo(
+        "RL007", "wall-clock-outside-obs",
+        "Library code under src/repro/ never reads the wall clock "
+        "directly (time.time/perf_counter/monotonic/...): timings "
+        "route through repro.obs.metrics.now() so they land in the "
+        "metrics registry instead of ad-hoc prints; the obs layer is "
+        "the single allowed call site.",
+        "DESIGN §11 (this PR)"),
 )
 
 AUDIT_CHECKS = (

@@ -539,6 +539,53 @@ class UnmaskedPaddedLoadRule(Rule):
                     f"into the result (DESIGN §8 mask discipline)")
 
 
+# ---------------------------------------------------------------------------
+# RL007 — wall-clock reads route through the obs layer
+# ---------------------------------------------------------------------------
+
+class WallClockOutsideObsRule(Rule):
+    """DESIGN §11: ``obs.metrics.now()`` is the library's single
+    wall-clock site. A stray ``time.time()``/``perf_counter()`` in
+    library code is either dead telemetry (not drained into any
+    registry/sink) or — worse — a host sync hiding inside a jit-adjacent
+    path that no profiler span will attribute. Scoped to ``src/repro/``
+    (scripts, benchmarks and tests time things however they like);
+    the obs layer itself is the one allowed caller."""
+
+    id = "RL007"
+
+    _CLOCK_FNS = frozenset(("time", "perf_counter", "monotonic",
+                            "process_time", "perf_counter_ns",
+                            "monotonic_ns", "time_ns"))
+
+    def applies(self, relpath: str) -> bool:
+        return ("src/repro/" in relpath or relpath.startswith("repro/")) \
+            and "/obs/" not in relpath
+
+    def check(self, tree, src, relpath):
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                d = _dotted(node.func)
+                mod, _, attr = d.rpartition(".")
+                if mod == "time" and attr in self._CLOCK_FNS:
+                    yield self.finding(
+                        relpath, node.lineno,
+                        f"direct `{d}()` call outside the obs layer — "
+                        f"library code reads the wall clock through "
+                        f"repro.obs.metrics.now() so every timing "
+                        f"lands in the metrics registry (DESIGN §11)")
+            elif isinstance(node, ast.ImportFrom):
+                if (node.module or "") == "time":
+                    bad = [a.name for a in node.names
+                           if a.name in self._CLOCK_FNS]
+                    if bad:
+                        yield self.finding(
+                            relpath, node.lineno,
+                            f"importing {', '.join(bad)} from time "
+                            f"outside the obs layer — use "
+                            f"repro.obs.metrics.now() (DESIGN §11)")
+
+
 RULES: Sequence[Rule] = (
     DirectAggregationRule(),
     KVRepeatRule(),
@@ -546,6 +593,7 @@ RULES: Sequence[Rule] = (
     UnhashableStaticRule(),
     IndexMapPurityRule(),
     UnmaskedPaddedLoadRule(),
+    WallClockOutsideObsRule(),
 )
 
 

@@ -1,0 +1,62 @@
+"""``repro.obs``: jit-safe telemetry for the robust train/serve paths.
+
+Layout (DESIGN.md §11):
+
+* :mod:`~repro.obs.catalog` — canonical metric names, kinds and bucket
+  edges (stdlib-only; the docs CI checks DESIGN.md §11 against it).
+* :mod:`~repro.obs.metrics` — host-side ``MetricsRegistry``, fixed-edge
+  ``Histogram`` (with percentiles), and ``now()`` — the repo's single
+  wall-clock site (reprolint RL007).
+* :mod:`~repro.obs.sinks`   — JSONL writer + Prometheus text exposition.
+* :mod:`~repro.obs.diag`    — jit-side diagnostics (suspicion scores,
+  alpha-hat, replica disagreement, histogram counts) as static-shape
+  aux outputs. Imports jax.
+* :mod:`~repro.obs.trace`   — profiler spans. Imports jax.
+
+The stdlib-only half (catalog, metrics, sinks) is imported eagerly so
+``repro.obs`` works in jax-less environments (docs CI, pre-commit);
+the jax half loads lazily on attribute access.
+"""
+from __future__ import annotations
+
+from . import catalog, metrics, sinks
+from .metrics import Histogram, MetricsRegistry, now
+from .sinks import JsonlSink, merge_records, prometheus_text, read_jsonl
+
+__all__ = [
+    "catalog",
+    "metrics",
+    "sinks",
+    "diag",
+    "trace",
+    "Histogram",
+    "MetricsRegistry",
+    "now",
+    "JsonlSink",
+    "read_jsonl",
+    "merge_records",
+    "prometheus_text",
+    "AggDiagnostics",
+    "trace_span",
+    "named_span",
+]
+
+_LAZY = {
+    "diag": (".diag", None),
+    "trace": (".trace", None),
+    "AggDiagnostics": (".diag", "AggDiagnostics"),
+    "trace_span": (".trace", "trace_span"),
+    "named_span": (".trace", "named_span"),
+}
+
+
+def __getattr__(name):
+    entry = _LAZY.get(name)
+    if entry is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    mod = importlib.import_module(entry[0], __name__)
+    obj = mod if entry[1] is None else getattr(mod, entry[1])
+    globals()[name] = obj
+    return obj

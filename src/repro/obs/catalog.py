@@ -1,0 +1,131 @@
+"""Canonical metric catalog for the telemetry layer (DESIGN.md §11).
+
+Pure data, stdlib-only — the same property :mod:`repro.lint.catalog`
+keeps for the rule table: ``scripts/check_docs.py`` imports this module
+to verify the DESIGN.md §11 metric-name table stays in sync with the
+registered metrics, and it must be able to do so without jax.
+
+Every metric the repo emits is registered here with its kind, unit and
+(for histograms) fixed bucket edges. The names are the single shared
+vocabulary: ``examples/serve.py``, ``benchmarks/serve.py``, the
+scheduler and the launch dry-run all record under these names, so one
+JSONL artifact (and one Prometheus exposition) carries the whole
+pipeline's telemetry. A ``MetricsRegistry`` accepts unknown names — the
+catalog is documentation-enforcing, not a runtime gate — but anything
+the repo itself records must be listed here or the docs CI fails.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+__all__ = [
+    "MetricInfo",
+    "METRICS",
+    "LATENCY_EDGES_S",
+    "FRACTION_EDGES",
+    "default_edges",
+    "info",
+]
+
+
+def _log_edges(decades, mantissas) -> Tuple[float, ...]:
+    out = []
+    for d in decades:
+        for m in mantissas:
+            out.append(round(m * 10.0 ** d, 12))
+    return tuple(out)
+
+
+# Log-spaced latency edges, 10 per decade from 10us to 100s: adjacent
+# edges are <= 1.34x apart, so a within-bucket linear interpolation
+# bounds the percentile error at a few tens of percent of the value —
+# tight enough for the p50/p95/p99 fields in BENCH_serve.json while the
+# [len(edges)+1] counts vector stays a static-shape jit aux output.
+LATENCY_EDGES_S = _log_edges(
+    range(-5, 2), (1.0, 1.2, 1.5, 2.0, 2.5, 3.0, 4.0, 5.0, 6.0, 8.0)
+) + (100.0,)
+
+# Replica-disagreement rates are multiples of 1/m; 1/16 steps resolve
+# every realizable value up to m=16 replicas exactly.
+FRACTION_EDGES = tuple(round(i / 16.0, 6) for i in range(17))
+
+
+class MetricInfo(NamedTuple):
+    name: str
+    kind: str  # 'counter' | 'gauge' | 'histogram'
+    unit: str
+    description: str
+    edges: Optional[Tuple[float, ...]] = None  # histograms only
+
+
+METRICS = (
+    # -- serve path (engine + scheduler boundary) ---------------------------
+    MetricInfo("serve.queue_depth", "gauge", "requests",
+               "Requests waiting in the scheduler FIFO after admission."),
+    MetricInfo("serve.slots_active", "gauge", "slots",
+               "Pool slots holding a live, partially-decoded sequence."),
+    MetricInfo("serve.admitted", "counter", "requests",
+               "Requests prefilled into a pool slot."),
+    MetricInfo("serve.rejected", "counter", "requests",
+               "Requests refused at admission (prompt + budget exceeds "
+               "slot capacity)."),
+    MetricInfo("serve.retired", "counter", "requests",
+               "Sequences completed (EOS or token budget) and evicted."),
+    MetricInfo("serve.tokens_out", "counter", "tokens",
+               "Decoded tokens handed back to the host (per decode "
+               "block, all active slots)."),
+    MetricInfo("serve.ttft_s", "histogram", "s",
+               "Time to first token: prefill + first sample, per "
+               "request/batch call.", LATENCY_EDGES_S),
+    MetricInfo("serve.decode_step_s", "histogram", "s",
+               "Per-token decode latency (scanned block wall time / "
+               "tokens in block).", LATENCY_EDGES_S),
+    MetricInfo("serve.compile_s", "gauge", "s",
+               "Trace + XLA compile time of the first serve call."),
+    MetricInfo("serve.replica_disagreement", "histogram", "fraction",
+               "Per-token fraction of decode replicas whose argmax "
+               "differs from the robustly aggregated token.",
+               FRACTION_EDGES),
+    # -- robust aggregation diagnostics (train path) ------------------------
+    MetricInfo("agg.alpha_hat", "gauge", "fraction",
+               "Online effective-alpha estimate: fraction of workers "
+               "whose deviation score is flagged Byzantine."),
+    MetricInfo("agg.suspected_workers", "gauge", "workers",
+               "Workers flagged by the suspicion mask this step."),
+    MetricInfo("agg.grad_norm_pre", "gauge", "l2",
+               "Mean per-worker gradient L2 norm before aggregation."),
+    MetricInfo("agg.grad_norm_post", "gauge", "l2",
+               "L2 norm of the robustly aggregated gradient."),
+    # -- training loop ------------------------------------------------------
+    MetricInfo("train.step_s", "histogram", "s",
+               "Wall time per training step (post-compile).",
+               LATENCY_EDGES_S),
+    MetricInfo("train.loss", "gauge", "nats",
+               "Training loss at the last recorded step."),
+    # -- launch / compile-time cost (dryrun HLO analysis) -------------------
+    MetricInfo("launch.compile_flops", "gauge", "flops",
+               "Trip-count-aware HLO FLOPs per chip from the dry-run "
+               "cost analysis."),
+    MetricInfo("launch.compile_hbm_bytes", "gauge", "bytes",
+               "HBM bytes accessed per chip (dry-run HLO analysis)."),
+    MetricInfo("launch.compile_collective_bytes", "gauge", "bytes",
+               "Collective bytes moved per chip (dry-run HLO analysis)."),
+    MetricInfo("launch.compile_peak_memory_bytes", "gauge", "bytes",
+               "Compiled peak memory per chip (args + temps + outputs "
+               "- aliased)."),
+)
+
+_BY_NAME = {m.name: m for m in METRICS}
+
+
+def info(name: str) -> Optional[MetricInfo]:
+    return _BY_NAME.get(name)
+
+
+def default_edges(name: str) -> Tuple[float, ...]:
+    """Bucket edges for a histogram metric: its registered edges, or the
+    latency grid for names outside the catalog."""
+    m = _BY_NAME.get(name)
+    if m is not None and m.edges is not None:
+        return m.edges
+    return LATENCY_EDGES_S

@@ -1,0 +1,150 @@
+"""jit-side aggregation diagnostics: static-shape aux outputs.
+
+The per-worker deviation statistics the robust aggregation layer
+computes and throws away are exactly the signals the ROADMAP's
+adaptive-aggregation item needs (Yin et al. 2018's detection-style
+analysis and ROSE's residual tests both reduce to them). This module
+recovers them as a fixed-shape :class:`AggDiagnostics` aux output that
+rides any jitted program — no host callbacks, no data-dependent shapes:
+
+* ``scores[w]``    — L2 deviation of worker ``w``'s row from the robust
+  aggregate, summed over every leaf of the gradient pytree.
+* ``suspected[w]`` — robust z-score outlier mask over the scores: MAD-
+  scaled (``core.vrmom.mad_scale``, the paper's own scale estimator)
+  with a relative floor so the all-honest regime — scores tightly
+  concentrated, MAD ≈ 0 — stays all-false instead of amplifying float
+  jitter into accusations. Identical honest rows (the serve replicas'
+  deterministic forward) give score 0 exactly and an all-false mask.
+* ``alpha_hat``    — fraction suspected: the online effective-alpha
+  estimate.
+* ``pre_norms[w]`` / ``post_norm`` — per-worker gradient norms before
+  aggregation and the norm of the aggregate.
+
+``histogram_counts`` is the jit-side half of the fixed-edge histogram
+convention (bucket ``i`` = ``(edges[i-1], edges[i]]``): the counts
+vector is a static ``[len(edges)+1]`` aux output that
+``obs.metrics.Histogram.merge_counts`` drains host-side.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.vrmom import mad_scale, mom
+
+__all__ = [
+    "AggDiagnostics",
+    "finalize_diag",
+    "diagnose",
+    "tree_diagnose",
+    "replica_disagreement",
+    "histogram_counts",
+    "ServeDiag",
+    "serve_diag",
+]
+
+# Suspicion threshold on the robust z-score. The denominator carries a
+# 5% relative floor, so a worker is flagged only when its deviation
+# score exceeds the median score by > 4 MAD-sigmas AND by > 20% of the
+# median — honest-only stacks (scores concentrated within O(1/sqrt(n))
+# relative spread) never trip either arm, while any of the core/attacks
+# corruptions moves the corrupted rows orders of magnitude past both.
+_Z_THRESH = 4.0
+_REL_FLOOR = 0.05
+
+
+class AggDiagnostics(NamedTuple):
+    """Static-shape per-step aggregation diagnostics (W = worker count)."""
+
+    scores: jax.Array     # [W] f32 — L2 deviation from the aggregate
+    suspected: jax.Array  # [W] bool — robust-outlier mask
+    alpha_hat: jax.Array  # []  f32 — fraction suspected
+    pre_norms: jax.Array  # [W] f32 — per-worker gradient L2 norms
+    post_norm: jax.Array  # []  f32 — aggregate gradient L2 norm
+
+
+def finalize_diag(dev_sq, pre_sq, post_sq) -> AggDiagnostics:
+    """Deviation/norm second moments -> AggDiagnostics (all f32)."""
+    dev = jnp.sqrt(dev_sq.astype(jnp.float32))
+    center = mom(dev, axis=0)
+    scale = mad_scale(dev, axis=0, center=center)
+    z = (dev - center) / (scale + _REL_FLOOR * center + 1e-12)
+    suspected = z > _Z_THRESH
+    return AggDiagnostics(
+        scores=dev,
+        suspected=suspected,
+        alpha_hat=jnp.mean(suspected.astype(jnp.float32)),
+        pre_norms=jnp.sqrt(pre_sq.astype(jnp.float32)),
+        post_norm=jnp.sqrt(post_sq.astype(jnp.float32)),
+    )
+
+
+def diagnose(x, agg, axis: int = 0) -> AggDiagnostics:
+    """Diagnostics for one stacked array ``x`` ([.., W, ..] over
+    ``axis``) against its aggregate ``agg`` (x minus the worker dim)."""
+    if axis != 0:
+        x = jnp.moveaxis(x, axis, 0)
+    w = x.shape[0]
+    xf = x.reshape(w, -1).astype(jnp.float32)
+    af = agg.reshape(-1).astype(jnp.float32)
+    dev_sq = jnp.sum(jnp.square(xf - af[None]), axis=1)
+    pre_sq = jnp.sum(jnp.square(xf), axis=1)
+    post_sq = jnp.sum(jnp.square(af))
+    return finalize_diag(dev_sq, pre_sq, post_sq)
+
+
+def tree_diagnose(stacked, agg) -> AggDiagnostics:
+    """Diagnostics for a stacked-gradient pytree (leaves ``[W, ...]``)
+    against the aggregated pytree, accumulating the second moments
+    leaf-by-leaf — no second stacked copy is materialized, and under
+    GSPMD the per-leaf sums reduce over however the leaves are sharded.
+    """
+    sl = jax.tree.leaves(stacked)
+    al = jax.tree.leaves(agg)
+    w = sl[0].shape[0]
+    dev_sq = jnp.zeros((w,), jnp.float32)
+    pre_sq = jnp.zeros((w,), jnp.float32)
+    post_sq = jnp.zeros((), jnp.float32)
+    for s, a in zip(sl, al):
+        sf = s.reshape(w, -1).astype(jnp.float32)
+        af = a.reshape(-1).astype(jnp.float32)
+        dev_sq += jnp.sum(jnp.square(sf - af[None]), axis=1)
+        pre_sq += jnp.sum(jnp.square(sf), axis=1)
+        post_sq += jnp.sum(jnp.square(af))
+    return finalize_diag(dev_sq, pre_sq, post_sq)
+
+
+def replica_disagreement(logits_r, agg) -> jax.Array:
+    """[m, B, V] replica logits + [B, V] aggregate -> [B] f32 fraction
+    of replicas whose argmax differs from the aggregated token — the
+    serve path's live Byzantine detector."""
+    rep_tok = jnp.argmax(logits_r, axis=-1)           # [m, B]
+    agg_tok = jnp.argmax(agg, axis=-1)                # [B]
+    return jnp.mean((rep_tok != agg_tok[None]).astype(jnp.float32), axis=0)
+
+
+def histogram_counts(x, edges: Sequence[float]) -> jax.Array:
+    """Fixed-edge histogram counts of ``x`` (any shape, raveled) as a
+    static ``[len(edges)+1]`` int32 vector; ``edges`` must be a static
+    (hashable) sequence. Bucket ``i`` covers ``(edges[i-1], edges[i]]``
+    — identical to ``obs.metrics.Histogram``, so the counts drain via
+    ``Histogram.merge_counts`` with no rebinning."""
+    e = jnp.asarray(tuple(edges), jnp.float32)
+    idx = jnp.searchsorted(e, x.astype(jnp.float32).ravel(), side="left")
+    return jnp.zeros((len(tuple(edges)) + 1,), jnp.int32).at[idx].add(1)
+
+
+class ServeDiag(NamedTuple):
+    """Static-shape serve-loop diagnostics aux: a fixed-edge counts
+    vector over the per-token replica-disagreement rates plus their sum
+    (count = number of rates is static host-side knowledge)."""
+
+    counts: jax.Array  # [len(FRACTION_EDGES)+1] int32
+    total: jax.Array   # [] f32 — sum of the rates
+
+
+def serve_diag(rates, edges: Tuple[float, ...]) -> ServeDiag:
+    return ServeDiag(counts=histogram_counts(rates, edges),
+                     total=jnp.sum(rates.astype(jnp.float32)))

@@ -1,0 +1,36 @@
+"""Profiler spans: name the subsystems in ``jax.profiler`` traces.
+
+Two helpers for the two sides of the jit boundary:
+
+* ``trace_span(name)`` — host-side wall-clock span
+  (``jax.profiler.TraceAnnotation``): wraps dispatch + blocking work so
+  the profiler timeline attributes host time per subsystem.
+* ``named_span(name)`` — in-trace annotation (``jax.named_scope``):
+  names the ops staged out while it is active, so the compiled HLO (and
+  the device-side profile) carries the subsystem name. Zero runtime
+  cost — it only decorates metadata at trace time.
+
+The repo's hot paths are pre-annotated with the DESIGN.md §11 span
+names: ``rrs.all_to_all`` (the robust-reduce wire), ``kernels.aggregate``
+(the fused Pallas aggregation family), ``kernels.decode_attention``, and
+``serve.decode_scan`` (the engine's fused decode loop).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+__all__ = ["trace_span", "named_span"]
+
+
+@contextlib.contextmanager
+def trace_span(name: str):
+    """Host-side profiler span (shows up in jax.profiler traces)."""
+    with jax.profiler.TraceAnnotation(name):
+        yield
+
+
+def named_span(name: str):
+    """In-trace scope: names the ops staged under it (jax.named_scope)."""
+    return jax.named_scope(name)

@@ -73,11 +73,20 @@ class ServeEngine:
               (prefill, scanned decode, the replica-flat robust loop)
               inherits it and the fused decode-attention kernel runs
               inside the same scan as the fused aggregation kernel.
+    obs:      optional ``obs.MetricsRegistry``. With a robust config the
+              scanned decode loop additionally collects the per-token
+              replica-disagreement rate as a fixed-edge histogram-counts
+              aux (``obs.diag.ServeDiag`` — static shape, no host
+              callbacks in the scan) drained into the registry's
+              ``serve.replica_disagreement`` histogram after each
+              dispatch. The diag flag joins the jit cache key, so the
+              telemetry-free loop is a distinct compiled program whose
+              tokens stay bit-identical to ``obs=None``.
     """
 
     def __init__(self, cfg, params, *, max_len: int, n_slots: int = 4,
                  window="cfg", robust: Optional[R.RobustDecodeConfig] = None,
-                 attn_backend: Optional[str] = None):
+                 attn_backend: Optional[str] = None, obs=None):
         if attn_backend is not None:
             import dataclasses
 
@@ -93,6 +102,7 @@ class ServeEngine:
         self.n_slots = int(n_slots)
         self.window = window
         self.robust = robust
+        self.obs = obs
         self._fns = {}
         self._dims = C.slot_dims(self._pool_caches)
         if robust is not None:
@@ -174,6 +184,13 @@ class ServeEngine:
         rcfg = self.robust
         flat_dims = (self._pool_flat_dims
                      if pool and rcfg is not None else None)
+        # Telemetry variant: a distinct compiled program (diag joins the
+        # cache key) whose scan additionally emits the per-token replica-
+        # disagreement rates, folded post-scan into a static-shape
+        # fixed-edge counts vector (obs.diag.ServeDiag). Tokens are
+        # computed identically — the diag aux reads the logit stack and
+        # never feeds back.
+        diag = self.obs is not None and rcfg is not None
 
         def run(params, caches, tok, key):
             if flat_dims is not None:
@@ -182,6 +199,7 @@ class ServeEngine:
             def body(carry, _):
                 tok, caches, key = carry
                 key, akey, skey = jax.random.split(key, 3)
+                dis = None
                 if rcfg is not None:
                     flat_tok = jnp.tile(tok, rcfg.m)  # replica-major rows
                     logits_f, caches = M.decode_step(params, self.cfg, caches,
@@ -189,20 +207,34 @@ class ServeEngine:
                                                      window=self.window)
                     logits_r = logits_f.reshape((rcfg.m, tok.shape[0])
                                                 + logits_f.shape[1:])
-                    logits = R.robust_logits(logits_r, rcfg, akey)
+                    if diag:
+                        logits, dis = R.robust_logits(logits_r, rcfg, akey,
+                                                      with_diag=True)
+                    else:
+                        logits = R.robust_logits(logits_r, rcfg, akey)
                 else:
                     logits, caches = M.decode_step(params, self.cfg, caches,
                                                    tok, window=self.window)
                 nxt = sample_tokens(logits, skey, sc)
-                return (nxt, caches, key), nxt
+                return (nxt, caches, key), (nxt, dis) if diag else nxt
 
-            (tok, caches, _), toks = jax.lax.scan(
-                body, (tok, caches, key), None, length=n_steps)
+            from ..obs.trace import named_span
+
+            with named_span("serve.decode_scan"):
+                (tok, caches, _), ys = jax.lax.scan(
+                    body, (tok, caches, key), None, length=n_steps)
             if flat_dims is not None:
                 caches = R.unflatten_replicas(caches, flat_dims, rcfg.m)
-            return toks, caches  # toks: [n_steps, B]
+            if diag:
+                from ..obs.catalog import FRACTION_EDGES
+                from ..obs.diag import serve_diag
 
-        return self._fn(("loop", n_steps, sc, pool), lambda: jax.jit(run))
+                toks, dis = ys  # dis: [n_steps, B] disagreement rates
+                return toks, caches, serve_diag(dis, FRACTION_EDGES)
+            return ys, caches  # ys: toks [n_steps, B]
+
+        return self._fn(("loop", n_steps, sc, pool, diag),
+                        lambda: jax.jit(run))
 
     def _decode_step_fn(self, sc: Sampling):
         """Single-step dispatch — the Python-loop baseline the scan
@@ -221,6 +253,13 @@ class ServeEngine:
             return sample_tokens(logits, skey, sc), caches
 
         return self._fn(("step", sc), lambda: jax.jit(run))
+
+    def _drain_serve_diag(self, sd, n: int) -> None:
+        """Fold a jit-side ``ServeDiag`` aux into the host registry:
+        one device->host transfer of a fixed-size counts vector per
+        dispatch (never per token)."""
+        h = self.obs.histogram("serve.replica_disagreement")
+        h.merge_counts([int(c) for c in sd.counts], float(sd.total), n)
 
     # -- fixed-batch generation ---------------------------------------------
 
@@ -284,8 +323,11 @@ class ServeEngine:
             return tok[:, None]
         if self.robust is not None:
             caches = self._stack_flatten_fn(batch)(caches)
-        toks, _ = self._decode_loop_fn(n_tokens - 1, sampling, pool=False)(
+        out = self._decode_loop_fn(n_tokens - 1, sampling, pool=False)(
             self.params, caches, tok, key)
+        toks = out[0]
+        if len(out) == 3:
+            self._drain_serve_diag(out[2], (n_tokens - 1) * tok.shape[0])
         return jnp.concatenate([tok[:, None], toks.T], axis=1)
 
     def generate_python_loop(self, batch, n_tokens: int,
@@ -344,8 +386,11 @@ class ServeEngine:
         # the pool rests replica-stacked (admit/evict write [m, ...]
         # rows); the jitted loop runs the block replica-flat and
         # restores the layout before returning.
-        toks, caches = self._decode_loop_fn(n_steps, sampling, pool=True)(
+        out = self._decode_loop_fn(n_steps, sampling, pool=True)(
             self.params, pool.caches, jnp.asarray(cur_tok, jnp.int32), key)
+        toks, caches = out[0], out[1]
+        if len(out) == 3:
+            self._drain_serve_diag(out[2], n_steps * self.n_slots)
         lengths = jnp.where(pool.active, pool.lengths + n_steps, pool.lengths)
         return C.SlotPool(caches, lengths, pool.active), toks
 

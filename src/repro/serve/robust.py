@@ -184,18 +184,28 @@ def unflatten_replicas(flat_tree, dims, m: int):
 
 
 def robust_logits(logits_r, rcfg: RobustDecodeConfig,
-                  key: Optional[jax.Array] = None):
+                  key: Optional[jax.Array] = None, *,
+                  with_diag: bool = False):
     """Corrupt the attacked rows, then robustly aggregate.
 
     logits_r: [m, B, V] per-replica logits (the wire tensor). Returns
     [B, V] f32 aggregated logits via the Estimator's fused backend.
+    ``with_diag`` additionally returns the per-token replica-
+    disagreement rate ``[B] f32`` (``obs.diag.replica_disagreement``):
+    the fraction of replicas whose argmax differs from the served token
+    — the live Byzantine signal, 0 for an all-honest replica set.
     """
     if rcfg.attack != "none":
         if key is None:
             raise ValueError("attack injection needs a PRNG key")
         mask = replica_mask(rcfg.m, rcfg.alpha)
         logits_r = ATK.get(rcfg.attack)(key, logits_r, mask)
-    return rcfg.estimator.apply(logits_r.astype(jnp.float32), axis=0)
+    agg = rcfg.estimator.apply(logits_r.astype(jnp.float32), axis=0)
+    if with_diag:
+        from ..obs.diag import replica_disagreement
+
+        return agg, replica_disagreement(logits_r, agg)
+    return agg
 
 
 def robust_decode_step(params, cfg, rep_caches, token,

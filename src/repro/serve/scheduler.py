@@ -24,6 +24,7 @@ from typing import Dict, List, Optional
 import jax
 import numpy as np
 
+from ..obs.metrics import now as _now
 from .engine import GREEDY, Sampling, ServeEngine
 
 __all__ = ["Request", "Completion", "Scheduler"]
@@ -32,13 +33,16 @@ __all__ = ["Request", "Completion", "Scheduler"]
 @dataclasses.dataclass
 class Request:
     """One generation request. ``extras`` carries modality inputs
-    (whisper frames / VLM patches) keyed as the model batch expects."""
+    (whisper frames / VLM patches) keyed as the model batch expects.
+    ``submit_t`` is stamped by ``Scheduler.submit`` (obs clock) so
+    admission can observe time-to-first-token including queue wait."""
 
     tokens: np.ndarray  # [S] int32 prompt
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
     uid: Optional[int] = None
     extras: Optional[dict] = None
+    submit_t: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -50,13 +54,22 @@ class Completion:
 
 
 class Scheduler:
-    """Drives admit -> decode -> retire over a ``ServeEngine`` pool."""
+    """Drives admit -> decode -> retire over a ``ServeEngine`` pool.
+
+    Telemetry (when the engine carries an ``obs.MetricsRegistry``): the
+    queue/pool boundary records DESIGN.md §11's serve metrics — queue
+    depth and slot occupancy gauges, admitted/rejected/retired/tokens
+    counters, TTFT (submit -> first token, queue wait included) and
+    per-token decode-step latency histograms. All host-side, outside
+    the jitted programs; with ``obs=None`` no telemetry code runs.
+    """
 
     def __init__(self, engine: ServeEngine, *, decode_block: int = 4,
                  sampling: Sampling = GREEDY, seed: int = 0):
         if decode_block < 1:
             raise ValueError("decode_block must be >= 1")
         self.engine = engine
+        self._obs = engine.obs
         self.decode_block = int(decode_block)
         self.sampling = sampling
         self.pool = engine.make_pool()
@@ -79,6 +92,7 @@ class Scheduler:
             raise ValueError("prompt must be a non-empty 1-D token array")
         if req.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        req.submit_t = _now()
         self.queue.append(req)
         return req.uid
 
@@ -96,6 +110,9 @@ class Scheduler:
         self.completed[req.uid] = Completion(
             uid=req.uid, prompt=req.tokens,
             tokens=self._slot_out[slot], finished_by=by)
+        if self._obs is not None:
+            self._obs.counter("serve.retired")
+            self._obs.counter("serve.tokens_out", len(self._slot_out[slot]))
         self._slot_req[slot] = None
         self._slot_out[slot] = []
         self.pool = self.engine.evict(self.pool, slot)
@@ -131,6 +148,8 @@ class Scheduler:
                 self.completed[req.uid] = Completion(
                     uid=req.uid, prompt=req.tokens, tokens=[],
                     finished_by="rejected")
+                if self._obs is not None:
+                    self._obs.counter("serve.rejected")
             else:
                 break
             batch = {"tokens": req.tokens[None]}
@@ -142,6 +161,13 @@ class Scheduler:
             self.pool, first = self.engine.admit(
                 self.pool, slot, batch, sampling=self.sampling,
                 key=self._next_key())
+            if self._obs is not None:
+                self._obs.counter("serve.admitted")
+                if req.submit_t is not None:
+                    # admit() returned the first token as a host int, so
+                    # the device work is done: submit -> here is TTFT
+                    # with queue wait included.
+                    self._obs.observe("serve.ttft_s", _now() - req.submit_t)
             self._slot_req[slot] = req
             self._slot_out[slot] = []
             self._cur_tok[slot] = first
@@ -158,10 +184,18 @@ class Scheduler:
         active = self._active_slots()
         if not active:
             return False
+        if self._obs is not None:
+            self._obs.gauge("serve.queue_depth", len(self.queue))
+            self._obs.gauge("serve.slots_active", len(active))
+        t0 = _now()
         self.pool, toks = self.engine.decode_pool(
             self.pool, self._cur_tok, self.decode_block,
             sampling=self.sampling, key=self._next_key())
-        toks = np.asarray(toks)  # [decode_block, n_slots]
+        toks = np.asarray(toks)  # [decode_block, n_slots] (blocks: device
+        #                          work done — the block time is real)
+        if self._obs is not None:
+            self._obs.observe("serve.decode_step_s",
+                              (_now() - t0) / self.decode_block)
         self._cur_tok = toks[-1].astype(np.int32).copy()
         for slot in active:
             self._ingest(slot, list(toks[:, slot]))

@@ -50,13 +50,23 @@ def make_train_step(
     attack: str = "gaussian",
     global_batch: Optional[int] = None,
     microbatch: Optional[int] = None,
+    with_diag: bool = False,
 ) -> TrainSetup:
     """``estimator``: a ``core.estimator.Estimator`` (or method name) —
     the single aggregation spec threaded to every robust-reduction mode.
     ``microbatch``: gradient-accumulation steps per worker (None = auto:
     one-sequence microbatches when seq_len >= 2048 — keeps remat-stored
-    layer boundaries at one sequence/chip, see EXPERIMENTS.md §Perf)."""
+    layer boundaries at one sequence/chip, see EXPERIMENTS.md §Perf).
+    ``with_diag``: the step additionally returns an
+    ``obs.diag.AggDiagnostics`` aux (per-worker suspicion scores,
+    alpha-hat, pre/post norms) — static-shape arrays riding the same jit,
+    so enabling it changes the step signature but adds no host sync."""
     est = Estimator.coerce(estimator)
+    if with_diag and mode == "inloop":
+        raise ValueError(
+            "with_diag is unavailable in inloop mode: IB-RRS aggregates "
+            "inside the backward pass and the per-worker gradient stack "
+            "never materializes to diagnose. Use mode='stacked-rrs'.")
     worker_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     n_workers = 1
     for a in worker_axes:
@@ -189,12 +199,18 @@ def make_train_step(
                   grads = jax.tree.map(
                       lambda g: attack_fn(key, g, mask), grads)
               agg = RR.aggregate(grads, mesh, worker_axes, mode=mode,
-                                 est=est, specs=stacked_specs)
+                                 est=est, specs=stacked_specs,
+                                 with_diag=with_diag)
+          diag = None
+          if with_diag:
+              agg, diag = agg
           agg = jax.lax.with_sharding_constraint(
               agg, S.to_named(mesh, params_specs))
           new_params, new_opt = optimizer.update(agg, opt_state, params)
           new_params = jax.lax.with_sharding_constraint(
               new_params, S.to_named(mesh, params_specs))
+          if with_diag:
+              return new_params, new_opt, loss, diag
           return new_params, new_opt, loss
 
     return TrainSetup(

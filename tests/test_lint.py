@@ -304,6 +304,69 @@ def test_rl006_true_negative_masked_or_unpadded():
 
 
 # ---------------------------------------------------------------------------
+# RL007 — wall-clock-outside-obs
+# ---------------------------------------------------------------------------
+
+def test_rl007_true_positive_clock_call_and_import():
+    fs = run("""
+        import time
+        from time import perf_counter
+
+        def f():
+            t0 = time.time()
+            t1 = perf_counter()
+            return time.monotonic() - t0 + t1
+        """)
+    # the bare perf_counter() call is caught at its import site
+    assert ids(fs) == ["RL007", "RL007", "RL007"]
+
+
+def test_rl007_true_negative_obs_layer_and_nonclock_time():
+    # the obs layer IS the allowed wall-clock site
+    fs = lint_source(textwrap.dedent("""
+        import time
+
+        def now():
+            return time.perf_counter()
+        """), "src/repro/obs/metrics.py")
+    assert ids(fs) == []
+    # non-clock time functions (sleep, strftime) are fine anywhere
+    fs = run("""
+        import time
+
+        def f():
+            time.sleep(0.1)
+            return time.strftime("%Y")
+        """)
+    assert ids(fs) == []
+
+
+def test_rl007_scope_is_library_code_only():
+    src = """
+        import time
+
+        def f():
+            return time.time()
+        """
+    for relpath in ("benchmarks/serve.py", "examples/serve.py",
+                    "scripts/metrics_dump.py", "tests/test_obs.py"):
+        assert ids(lint_source(textwrap.dedent(src), relpath)) == []
+    assert ids(lint_source(textwrap.dedent(src),
+                           "src/repro/serve/scheduler.py")) == ["RL007"]
+
+
+def test_rl007_repo_library_tree_is_clean():
+    """The invariant holds on the actual tree: no direct wall-clock
+    reads anywhere under src/repro/ outside obs/metrics.py."""
+    from repro.lint import lint_paths
+
+    findings = [f for f in lint_paths([str(REPO / "src" / "repro")],
+                                      root=str(REPO))
+                if f.rule_id == "RL007" and not f.waived]
+    assert findings == [], findings
+
+
+# ---------------------------------------------------------------------------
 # hashability backstops (satellite 2)
 # ---------------------------------------------------------------------------
 
