@@ -248,11 +248,11 @@ def main() -> None:
         reg.observe("serve.decode_step_s", (now() - t0) / (N - 1))
     result["latency"] = {
         "backend": best, "batch": PB, "samples": lat_reps,
-        "ttft_s": {f"p{int(q*100)}": reg.histograms["serve.ttft_s"]
-                   .percentile(q) for q in (0.5, 0.95, 0.99)},
-        "decode_step_s": {f"p{int(q*100)}":
+        "ttft_s": {f"p{q}": reg.histograms["serve.ttft_s"]
+                   .percentile(q) for q in (50, 95, 99)},
+        "decode_step_s": {f"p{q}":
                           reg.histograms["serve.decode_step_s"]
-                          .percentile(q) for q in (0.5, 0.95, 0.99)},
+                          .percentile(q) for q in (50, 95, 99)},
     }
     print(f"serve_ttft_p50_{best}_b{PB},"
           f"{result['latency']['ttft_s']['p50'] * 1e6:.6g},")

@@ -116,8 +116,8 @@ def run_scheduler(engine, cfg, args, sampling, reg):
     snap = reg.snapshot()
     cnt = snap["counters"]
     h = reg.histograms.get("serve.decode_step_s")
-    extra = (f"  decode_step p50={h.percentile(0.5) * 1e3:.2f}ms "
-             f"p95={h.percentile(0.95) * 1e3:.2f}ms" if h and h.count else "")
+    extra = (f"  decode_step p50={h.percentile(50) * 1e3:.2f}ms "
+             f"p95={h.percentile(95) * 1e3:.2f}ms" if h and h.count else "")
     print(f"  obs: admitted={cnt.get('serve.admitted', 0):.0f} "
           f"retired={cnt.get('serve.retired', 0):.0f} "
           f"rejected={cnt.get('serve.rejected', 0):.0f} "

@@ -33,7 +33,7 @@ from repro.obs.sinks import (merge_records, prometheus_text,  # noqa: E402
                              read_jsonl)
 
 
-def summarize(paths, percentiles=(0.5, 0.95, 0.99)) -> dict:
+def summarize(paths, percentiles=(50, 95, 99)) -> dict:
     records = []
     for p in paths:
         records.extend(read_jsonl(p))
@@ -42,8 +42,8 @@ def summarize(paths, percentiles=(0.5, 0.95, 0.99)) -> dict:
         h = Histogram.from_snapshot(snap)
         if h.count == 0:
             continue
-        for q in percentiles:
-            summary["gauges"][f"{name}_p{int(q * 100)}"] = h.percentile(q)
+        for q in percentiles:  # q in percent, as Histogram.percentile takes
+            summary["gauges"][f"{name}_p{int(q)}"] = h.percentile(q)
     return summary
 
 
@@ -65,7 +65,7 @@ def main(argv=None) -> int:
             return 2
     summary = summarize(args.paths,
                         percentiles=() if args.no_percentiles
-                        else (0.5, 0.95, 0.99))
+                        else (50, 95, 99))
     if args.format == "json":
         text = json.dumps(summary, indent=2, sort_keys=True) + "\n"
     else:

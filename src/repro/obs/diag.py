@@ -125,15 +125,20 @@ def replica_disagreement(logits_r, agg) -> jax.Array:
     return jnp.mean((rep_tok != agg_tok[None]).astype(jnp.float32), axis=0)
 
 
-def histogram_counts(x, edges: Sequence[float]) -> jax.Array:
+def histogram_counts(x, edges: Sequence[float],
+                     mask=None) -> jax.Array:
     """Fixed-edge histogram counts of ``x`` (any shape, raveled) as a
     static ``[len(edges)+1]`` int32 vector; ``edges`` must be a static
     (hashable) sequence. Bucket ``i`` covers ``(edges[i-1], edges[i]]``
     — identical to ``obs.metrics.Histogram``, so the counts drain via
-    ``Histogram.merge_counts`` with no rebinning."""
+    ``Histogram.merge_counts`` with no rebinning. ``mask`` (bool,
+    broadcastable to ``x``) excludes entries without changing the static
+    shape — masked-out values simply contribute 0 to their bucket."""
     e = jnp.asarray(tuple(edges), jnp.float32)
     idx = jnp.searchsorted(e, x.astype(jnp.float32).ravel(), side="left")
-    return jnp.zeros((len(tuple(edges)) + 1,), jnp.int32).at[idx].add(1)
+    w = (jnp.ones(idx.shape, jnp.int32) if mask is None
+         else jnp.broadcast_to(mask, jnp.shape(x)).ravel().astype(jnp.int32))
+    return jnp.zeros((len(tuple(edges)) + 1,), jnp.int32).at[idx].add(w)
 
 
 class ServeDiag(NamedTuple):
@@ -145,6 +150,13 @@ class ServeDiag(NamedTuple):
     total: jax.Array   # [] f32 — sum of the rates
 
 
-def serve_diag(rates, edges: Tuple[float, ...]) -> ServeDiag:
-    return ServeDiag(counts=histogram_counts(rates, edges),
-                     total=jnp.sum(rates.astype(jnp.float32)))
+def serve_diag(rates, edges: Tuple[float, ...], mask=None) -> ServeDiag:
+    """``mask`` (bool, broadcastable to ``rates``) restricts the
+    histogram to live entries — the pool path passes the active-slot
+    mask so inactive slots decoding stale caches do not dilute the
+    per-request Byzantine signal."""
+    r = rates.astype(jnp.float32)
+    if mask is not None:
+        r = r * jnp.broadcast_to(mask, r.shape).astype(jnp.float32)
+    return ServeDiag(counts=histogram_counts(rates, edges, mask=mask),
+                     total=jnp.sum(r))

@@ -103,7 +103,9 @@ def prometheus_text(summary: dict) -> str:
     lines: List[str] = []
     for name in sorted(summary.get("counters", {})):
         pn = _prom_name(name)
-        lines.append(f"# TYPE {pn} counter")
+        # classic text format: the TYPE line must name the sample family
+        # (_total included), or strict parsers treat it as untyped
+        lines.append(f"# TYPE {pn}_total counter")
         lines.append(f"{pn}_total {_fmt(summary['counters'][name])}")
     for name in sorted(summary.get("gauges", {})):
         pn = _prom_name(name)

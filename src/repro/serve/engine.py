@@ -192,7 +192,11 @@ class ServeEngine:
         # never feeds back.
         diag = self.obs is not None and rcfg is not None
 
-        def run(params, caches, tok, key):
+        def run(params, caches, tok, key, active=None):
+            # active: optional [B] bool — pool-path slot liveness. Only
+            # the diag aux reads it (inactive slots decode stale caches;
+            # their disagreement rates are masked out of the histogram);
+            # tokens and caches are computed identically either way.
             if flat_dims is not None:
                 caches = R.flatten_replicas(caches, flat_dims, rcfg.m)
 
@@ -230,7 +234,9 @@ class ServeEngine:
                 from ..obs.diag import serve_diag
 
                 toks, dis = ys  # dis: [n_steps, B] disagreement rates
-                return toks, caches, serve_diag(dis, FRACTION_EDGES)
+                mask = None if active is None else active[None, :]
+                return toks, caches, serve_diag(dis, FRACTION_EDGES,
+                                                mask=mask)
             return ys, caches  # ys: toks [n_steps, B]
 
         return self._fn(("loop", n_steps, sc, pool, diag),
@@ -386,11 +392,21 @@ class ServeEngine:
         # the pool rests replica-stacked (admit/evict write [m, ...]
         # rows); the jitted loop runs the block replica-flat and
         # restores the layout before returning.
-        out = self._decode_loop_fn(n_steps, sampling, pool=True)(
-            self.params, pool.caches, jnp.asarray(cur_tok, jnp.int32), key)
+        fn = self._decode_loop_fn(n_steps, sampling, pool=True)
+        diag = self.obs is not None and self.robust is not None
+        if diag:
+            # the diag aux masks inactive slots (stale caches decode
+            # garbage — their disagreement rates would dilute the live
+            # Byzantine signal), so drain with the live sample count.
+            out = fn(self.params, pool.caches,
+                     jnp.asarray(cur_tok, jnp.int32), key, pool.active)
+        else:
+            out = fn(self.params, pool.caches,
+                     jnp.asarray(cur_tok, jnp.int32), key)
         toks, caches = out[0], out[1]
         if len(out) == 3:
-            self._drain_serve_diag(out[2], n_steps * self.n_slots)
+            n_active = int(jax.device_get(pool.active).sum())
+            self._drain_serve_diag(out[2], n_steps * n_active)
         lengths = jnp.where(pool.active, pool.lengths + n_steps, pool.lengths)
         return C.SlotPool(caches, lengths, pool.active), toks
 

@@ -62,6 +62,12 @@ class Scheduler:
     counters, TTFT (submit -> first token, queue wait included) and
     per-token decode-step latency histograms. All host-side, outside
     the jitted programs; with ``obs=None`` no telemetry code runs.
+
+    Compile exclusion: the first admission at a given prompt shape and
+    the first decode block each trace + XLA-compile their program, so
+    that dispatch is orders of magnitude above steady state. Those
+    samples go to the ``serve.compile_s`` gauge (last-wins, like every
+    gauge) instead of polluting the TTFT / decode-step histograms.
     """
 
     def __init__(self, engine: ServeEngine, *, decode_block: int = 4,
@@ -81,6 +87,12 @@ class Scheduler:
         self._slot_req: List[Optional[Request]] = [None] * n
         self._slot_out: List[List[int]] = [[] for _ in range(n)]
         self._cur_tok = np.zeros((n,), np.int32)
+        # shapes whose prefill/admit programs have already compiled (the
+        # prefill jit caches per prompt length + extras structure), and
+        # whether the decode-block program has: first dispatches are
+        # compile time, not latency samples.
+        self._warm_prefill: set = set()
+        self._decode_warm = False
 
     # -- submission ---------------------------------------------------------
 
@@ -158,16 +170,24 @@ class Scheduler:
                 # [F, D] or patches [P, D]; prepend the batch-1 dim.
                 for k, v in req.extras.items():
                     batch[k] = np.asarray(v)[None]
+            shape_key = (req.tokens.shape[0],
+                         tuple(sorted(req.extras)) if req.extras else ())
+            t_admit = _now()
             self.pool, first = self.engine.admit(
                 self.pool, slot, batch, sampling=self.sampling,
                 key=self._next_key())
             if self._obs is not None:
                 self._obs.counter("serve.admitted")
-                if req.submit_t is not None:
+                if shape_key not in self._warm_prefill:
+                    # cold shape: this admit traced + compiled the
+                    # prefill program — compile time, not a TTFT sample.
+                    self._obs.gauge("serve.compile_s", _now() - t_admit)
+                elif req.submit_t is not None:
                     # admit() returned the first token as a host int, so
                     # the device work is done: submit -> here is TTFT
                     # with queue wait included.
                     self._obs.observe("serve.ttft_s", _now() - req.submit_t)
+            self._warm_prefill.add(shape_key)
             self._slot_req[slot] = req
             self._slot_out[slot] = []
             self._cur_tok[slot] = first
@@ -194,8 +214,14 @@ class Scheduler:
         toks = np.asarray(toks)  # [decode_block, n_slots] (blocks: device
         #                          work done — the block time is real)
         if self._obs is not None:
-            self._obs.observe("serve.decode_step_s",
-                              (_now() - t0) / self.decode_block)
+            if self._decode_warm:
+                self._obs.observe("serve.decode_step_s",
+                                  (_now() - t0) / self.decode_block)
+            else:
+                # first block: trace + compile of the scanned decode
+                # program dominates — record it as compile time.
+                self._obs.gauge("serve.compile_s", _now() - t0)
+        self._decode_warm = True
         self._cur_tok = toks[-1].astype(np.int32).copy()
         for slot in active:
             self._ingest(slot, list(toks[:, slot]))

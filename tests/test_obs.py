@@ -198,6 +198,8 @@ def test_sinks_jsonl_prometheus_roundtrip(tmp_path):
     assert summary["gauges"]["agg.alpha_hat"] == 0.25
     assert summary["histograms"]["serve.ttft_s"]["count"] == 2
     text = prometheus_text(summary)
+    # the TYPE line names the sample family (_total) — classic format
+    assert "# TYPE serve_admitted_total counter" in text
     assert "serve_admitted_total 4" in text
     assert "agg_alpha_hat 0.25" in text
     assert 'serve_ttft_s_bucket{le="+Inf"} 2' in text
@@ -235,6 +237,34 @@ def test_metrics_dump_cli(tmp_path):
          str(tmp_path / "nope.jsonl")],
         capture_output=True, text=True, env=env, timeout=120)
     assert r3.returncode == 2
+
+
+def test_metrics_dump_percentile_values_percent_scale(tmp_path):
+    """The synthetic _p50/_p95/_p99 gauges take q in PERCENT: on a
+    skewed distribution (90% fast, 10% slow) recorded through the dump
+    path, p50 must land in the fast mass and p95/p99 in the slow tail —
+    a fraction-scale call (0.95) would return ~the minimum."""
+    path = str(tmp_path / "metrics.jsonl")
+    reg = MetricsRegistry()
+    vals = [0.001] * 90 + [0.5] * 10
+    reg.histogram("serve.decode_step_s").record_many(vals)
+    with JsonlSink(path) as sink:
+        sink.write_registry(reg)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_REPO, "src")
+    r = subprocess.run(
+        [sys.executable, os.path.join(_REPO, "scripts", "metrics_dump.py"),
+         path, "--format", "json"],
+        capture_output=True, text=True, env=env, timeout=120)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    g = json.loads(r.stdout)["gauges"]
+    p50 = g["serve.decode_step_s_p50"]
+    p95 = g["serve.decode_step_s_p95"]
+    p99 = g["serve.decode_step_s_p99"]
+    assert p50 <= p95 <= p99
+    assert p50 < 0.01, p50    # median sits in the fast mass
+    assert p95 >= 0.4, p95    # tail percentiles reach the slow samples
+    assert p99 <= max(vals)
 
 
 # ---------------------------------------------------------------------------
@@ -389,6 +419,28 @@ def test_engine_obs_tokens_bit_identical_and_drain(dense):
     assert h.count == 2 * (6 - 1) * 2
 
 
+def test_decode_pool_diag_masks_inactive_slots(dense):
+    """Pool-path disagreement drain counts ACTIVE slots only: inactive
+    slots decode stale/garbage caches and their rates must not dilute
+    the per-request Byzantine signal (count = n_steps * n_active, and
+    the mean stays exactly the attack's disagreement rate)."""
+    cfg, params = dense
+    rcfg = RobustDecodeConfig(m=4, estimator="median", attack="signflip",
+                              alpha=0.25)
+    reg = MetricsRegistry()
+    eng = ServeEngine(cfg, params, max_len=32, n_slots=3, robust=rcfg,
+                      obs=reg)
+    pool = eng.make_pool()
+    pool, first = eng.admit(pool, 0, _prompt_batch(cfg, B=1, S=8))
+    n_steps = 4
+    pool, _ = eng.decode_pool(pool, np.asarray([first, 0, 0], np.int32),
+                              n_steps)
+    h = reg.histograms["serve.replica_disagreement"]
+    assert h.count == n_steps * 1, h.count  # 1 active of 3 slots
+    # 1 of 4 replicas signflipped -> disagreement exactly 1/4 per token
+    assert abs(h.mean - 0.25) < 1e-6, h.mean
+
+
 def test_engine_without_robust_records_nothing(dense):
     """obs without a robust config: the plain decode loop carries no
     diag aux (nothing to disagree about) and stays 2-output."""
@@ -418,7 +470,10 @@ def test_scheduler_records_serve_metrics(dense):
     assert c["serve.retired"] == 3
     assert c["serve.rejected"] == 1
     assert c["serve.tokens_out"] == sum(len(done[u].tokens) for u in uids)
-    assert reg.histograms["serve.ttft_s"].count == 3
+    # first admission at the (6,) prompt shape compiles the prefill
+    # program, so it lands in serve.compile_s, not the TTFT histogram
+    assert reg.histograms["serve.ttft_s"].count == 2
+    assert reg.gauges["serve.compile_s"] > 0.0
     assert reg.histograms["serve.decode_step_s"].count >= 1
     assert reg.gauges["serve.queue_depth"] == 0.0  # last cycle: drained
     assert "serve.slots_active" in reg.gauges
