@@ -78,6 +78,11 @@ class ArchConfig:
     # "auto" | "jnp" (chunked mha reference) | "flash" (fused Pallas
     # kernels: full-seq flash + grouped-GQA decode)
     attn_backend: str = "auto"
+    # KV-cache storage dtype (DESIGN.md §12): None -> compute_dtype;
+    # "bfloat16" halves, "int8" quarters the per-slot cache footprint
+    # (int8 carries per-(row, position) f32 scales beside the cache,
+    # dequantized inside the decode-attention kernel's block loads).
+    kv_dtype: Optional[str] = None
     loss_chunk: int = 1024  # sequence-chunked cross-entropy
     remat: bool = True
     remat_block: int = 1  # >1: two-level remat, store every Nth boundary

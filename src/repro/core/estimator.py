@@ -39,6 +39,7 @@ from __future__ import annotations
 
 from typing import NamedTuple, Optional, Union
 
+import jax
 import jax.numpy as jnp
 
 from . import aggregators as _A
@@ -196,6 +197,41 @@ class Estimator(NamedTuple):
             out = aggregate_pallas(flat, method=self.method, K=self.K,
                                    beta=self.beta, interpret=self.interpret)
         return out.reshape(shape)
+
+    def apply_sample(self, x, top_k: int = 0, with_agg: bool = True):
+        """Fused aggregation + sampling tail over a ``[m, B, V]`` stack.
+
+        The fused-tail dispatch rides the same ``backend=`` pattern as
+        ``apply``: when the resolved backend is ``"pallas"`` and the
+        method has a fused kernel, aggregation and the sampling epilogue
+        (greedy argmax for ``top_k == 0``, top-k selection otherwise)
+        run as ONE Pallas dispatch on the VMEM-resident aggregate
+        (DESIGN.md §12); every other backend computes the aggregate via
+        ``apply`` and runs the identical jnp tail, so tokens agree
+        across backends (bit-identical for greedy).
+
+        Returns ``(agg, tok[B] int32)`` for greedy or
+        ``(agg, topv [B, k], topi [B, k])`` for top-k; ``agg`` is None
+        when ``with_agg=False`` on the fused path (the [B, V] aggregate
+        write is skipped entirely).
+        """
+        if x.ndim != 3:
+            raise ValueError(
+                f"apply_sample wants [m, B, V] logit stacks, got {x.shape}")
+        m = x.shape[0]
+        self.validate(m)
+        backend = self.resolve_backend()
+        if backend == "pallas" and self.method in _FUSED_METHODS:
+            from ..kernels.vrmom import aggregate_sample_pallas
+
+            return aggregate_sample_pallas(
+                x, method=self.method, K=self.K, beta=self.beta,
+                top_k=top_k, interpret=self.interpret, with_agg=with_agg)
+        agg = self.apply(x, axis=0)
+        if top_k == 0:
+            return agg, jnp.argmax(agg, axis=-1).astype(jnp.int32)
+        topv, topi = jax.lax.top_k(agg, top_k)
+        return agg, topv, topi.astype(jnp.int32)
 
     def apply_with_diag(self, x, axis: int = 0):
         """``apply`` plus per-worker diagnostics (DESIGN.md §11).

@@ -19,13 +19,19 @@ Two layouts of the same online-softmax math (DESIGN.md §8):
   free reshape of the serving cache layout ``[B, T, Hkv, dh]`` — so the
   per-kv-head slab is a plain block of the last two dims (lane-aligned
   for dh in {64, 128}) with no transpose of the cache.
-* **wide** (interpret mode, host CPU): grid ``(n_kv_blocks,)`` with the
-  whole ``[B, Hkv, G, dh]`` query block and ``[B, blk_k, Hkv*dh]`` K/V
-  blocks resident at once, grouped einsums over the head axes. One grid
-  step per ``INTERPRET_BLK_K`` keys amortizes the per-step interpreter
-  overhead (à la ``vrmom.INTERPRET_TILE``), which is what lets the
-  kernel beat the chunked jnp ``mha`` at serving shapes on host CPU too
+* **wide** (interpret mode, host CPU): grid ``(n_batch_blocks,
+  n_kv_blocks)`` — kv innermost — with a ``[blk_b, Hkv, G, dh]`` query
+  block and ``[blk_b, blk_k, Hkv*dh]`` K/V blocks resident at once,
+  grouped einsums over the head axes. ``blk_b`` defaults to the whole
+  batch (one batch block): per-grid-step interpreter overhead
+  dominates, so one step per ``INTERPRET_BLK_K`` keys amortizes it (à
+  la ``vrmom.INTERPRET_TILE``), which is what lets the kernel beat the
+  chunked jnp ``mha`` at serving shapes on host CPU too
   (``BENCH_attn.json``).
+
+int8 KV caches pass per-(row, position) ``[B, T]`` f32 scales; both
+layouts fuse the dequant multiply into the K/V block load (the cache
+crosses HBM at 1 byte/element — DESIGN.md §12).
 
 Validity masking is per row: ``kv_len`` may be a scalar (classic batched
 decode) or a per-row ``[B]`` vector (the slot-cache serving path,
@@ -71,8 +77,12 @@ def _online_update(s, pv, m_scr, l_scr, acc_scr):
     acc_scr[...] = acc_scr[...] * alpha[..., None] + pv(p)
 
 
-def _kernel_narrow(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
-                   acc_scr, *, scale, blk_k, n_k):
+def _kernel_narrow(len_ref, q_ref, k_ref, v_ref, *refs, scale, blk_k, n_k,
+                   has_scale):
+    if has_scale:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = refs
+    else:
+        o_ref, m_scr, l_scr, acc_scr = refs
     ki = pl.program_id(2)
 
     @pl.when(ki == 0)
@@ -84,6 +94,11 @@ def _kernel_narrow(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
     q = q_ref[0, 0].astype(jnp.float32)  # [G, dh] — the whole query group
     k = k_ref[0].astype(jnp.float32)     # [blk_k, dh] — loaded ONCE per
     v = v_ref[0].astype(jnp.float32)     # kv head, shared by all G rows
+    if has_scale:
+        # int8 KV: per-position dequant fused into the block load
+        # (DESIGN.md §12) — the cache crosses HBM at 1 byte/element
+        k = k * ks_ref[0][:, None]
+        v = v * vs_ref[0][:, None]
     s = jnp.dot(q * scale, k.T, preferred_element_type=jnp.float32)
 
     kv_len = len_ref[0, 0]
@@ -99,9 +114,13 @@ def _kernel_narrow(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
         o_ref[0, 0] = out.astype(o_ref.dtype)
 
 
-def _kernel_wide(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
-                 acc_scr, *, scale, blk_k, n_k):
-    ki = pl.program_id(0)
+def _kernel_wide(len_ref, q_ref, k_ref, v_ref, *refs, scale, blk_k, n_k,
+                 has_scale):
+    if has_scale:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = refs
+    else:
+        o_ref, m_scr, l_scr, acc_scr = refs
+    ki = pl.program_id(1)  # kv axis innermost; batch blocks outer
 
     @pl.when(ki == 0)
     def _init():
@@ -109,10 +128,14 @@ def _kernel_wide(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    B, Hkv, G, dh = q_ref.shape
+    B, Hkv, G, dh = q_ref.shape  # B here is the batch block (blk_b rows)
     q = q_ref[...].astype(jnp.float32)                       # [B,Hkv,G,dh]
     k = k_ref[...].astype(jnp.float32).reshape(B, blk_k, Hkv, dh)
     v = v_ref[...].astype(jnp.float32).reshape(B, blk_k, Hkv, dh)
+    if has_scale:
+        # int8 KV: per-(row, position) dequant fused into the block load
+        k = k * ks_ref[...][:, :, None, None]
+        v = v * vs_ref[...][:, :, None, None]
     s = jnp.einsum("bhgd,bthd->bhgt", q * scale, k,
                    preferred_element_type=jnp.float32)       # [B,Hkv,G,blk]
 
@@ -130,11 +153,15 @@ def _kernel_wide(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
         o_ref[...] = out.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("blk_k", "interpret"))
-def _decode_grouped(q, k, v, lens, blk_k, interpret):
-    """q: [B, Hkv, G, dh]; k/v: [B, T, Hkv, dh]; lens: [B] int32."""
+@functools.partial(jax.jit,
+                   static_argnames=("blk_k", "blk_b", "interpret"))
+def _decode_grouped(q, k, v, lens, k_scale, v_scale, blk_k, blk_b,
+                    interpret):
+    """q: [B, Hkv, G, dh]; k/v: [B, T, Hkv, dh]; lens: [B] int32;
+    k_scale/v_scale: [B, T] f32 int8-dequant scales or None."""
     B, Hkv, G, dh = q.shape
     T = k.shape[1]
+    has_scale = k_scale is not None
     blk_k = min(blk_k, T)
     pad_k = (-T) % blk_k
     if pad_k:
@@ -142,36 +169,59 @@ def _decode_grouped(q, k, v, lens, blk_k, interpret):
         padw = ((0, 0), (0, pad_k), (0, 0), (0, 0))
         k = jnp.pad(k, padw)
         v = jnp.pad(v, padw)
+        if has_scale:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, pad_k)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, pad_k)))
     Tk = T + pad_k
     n_k = Tk // blk_k
     # Free reshape: the per-kv-head [blk_k, dh] slab becomes a plain
     # block of the last two dims — the cache is never transposed.
     k2 = k.reshape(B, Tk, Hkv * dh)
     v2 = v.reshape(B, Tk, Hkv * dh)
-    lens2 = lens[:, None]
     scale = 1.0 / (dh ** 0.5)
 
     if interpret:
-        # wide layout: whole [B, Hkv, G, dh] block per grid step
+        # wide layout: [blk_b, Hkv, G, dh] query block per grid step,
+        # batch blocks outer, kv axis inner (scratch accumulates per
+        # batch block). Zero-padded batch rows (lens 0) normalize to 0
+        # and are sliced off below.
+        blk_b = min(blk_b, B)
+        pad_b = (-B) % blk_b
+        if pad_b:
+            q = jnp.pad(q, ((0, pad_b),) + ((0, 0),) * 3)
+            k2 = jnp.pad(k2, ((0, pad_b), (0, 0), (0, 0)))
+            v2 = jnp.pad(v2, ((0, pad_b), (0, 0), (0, 0)))
+            lens = jnp.pad(lens, (0, pad_b))
+            if has_scale:
+                k_scale = jnp.pad(k_scale, ((0, pad_b), (0, 0)))
+                v_scale = jnp.pad(v_scale, ((0, pad_b), (0, 0)))
+        Bb = B + pad_b
         kernel = functools.partial(_kernel_wide, scale=scale, blk_k=blk_k,
-                                   n_k=n_k)
-        grid = (n_k,)
+                                   n_k=n_k, has_scale=has_scale)
+        grid = (Bb // blk_b, n_k)
         in_specs = [
-            pl.BlockSpec((B, 1), lambda j: (0, 0)),
-            pl.BlockSpec((B, Hkv, G, dh), lambda j: (0, 0, 0, 0)),
-            pl.BlockSpec((B, blk_k, Hkv * dh), lambda j: (0, j, 0)),
-            pl.BlockSpec((B, blk_k, Hkv * dh), lambda j: (0, j, 0)),
+            pl.BlockSpec((blk_b, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((blk_b, Hkv, G, dh), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((blk_b, blk_k, Hkv * dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((blk_b, blk_k, Hkv * dh), lambda i, j: (i, j, 0)),
         ]
-        out_specs = pl.BlockSpec((B, Hkv, G, dh), lambda j: (0, 0, 0, 0))
+        if has_scale:
+            in_specs += [pl.BlockSpec((blk_b, blk_k), lambda i, j: (i, j)),
+                         pl.BlockSpec((blk_b, blk_k), lambda i, j: (i, j))]
+        out_specs = pl.BlockSpec((blk_b, Hkv, G, dh),
+                                 lambda i, j: (i, 0, 0, 0))
+        out_shape = jax.ShapeDtypeStruct((Bb, Hkv, G, dh), q.dtype)
         scratch = [
-            pltpu.VMEM((B, Hkv, G), jnp.float32),
-            pltpu.VMEM((B, Hkv, G), jnp.float32),
-            pltpu.VMEM((B, Hkv, G, dh), jnp.float32),
+            pltpu.VMEM((blk_b, Hkv, G), jnp.float32),
+            pltpu.VMEM((blk_b, Hkv, G), jnp.float32),
+            pltpu.VMEM((blk_b, Hkv, G, dh), jnp.float32),
         ]
     else:
-        # narrow layout: 2-D MXU-shaped blocks, kv axis sequential
+        # narrow layout: 2-D MXU-shaped blocks, kv axis sequential; the
+        # batch already rides the grid row-by-row (blk_b inapplicable)
+        Bb = B
         kernel = functools.partial(_kernel_narrow, scale=scale, blk_k=blk_k,
-                                   n_k=n_k)
+                                   n_k=n_k, has_scale=has_scale)
         grid = (B, Hkv, n_k)
         in_specs = [
             pl.BlockSpec((1, 1), lambda b, h, j: (b, 0)),
@@ -179,29 +229,38 @@ def _decode_grouped(q, k, v, lens, blk_k, interpret):
             pl.BlockSpec((1, blk_k, dh), lambda b, h, j: (b, j, h)),
             pl.BlockSpec((1, blk_k, dh), lambda b, h, j: (b, j, h)),
         ]
+        if has_scale:
+            in_specs += [pl.BlockSpec((1, blk_k), lambda b, h, j: (b, j)),
+                         pl.BlockSpec((1, blk_k), lambda b, h, j: (b, j))]
         out_specs = pl.BlockSpec((1, 1, G, dh), lambda b, h, j: (b, h, 0, 0))
+        out_shape = jax.ShapeDtypeStruct((B, Hkv, G, dh), q.dtype)
         scratch = [
             pltpu.VMEM((G,), jnp.float32),
             pltpu.VMEM((G,), jnp.float32),
             pltpu.VMEM((G, dh), jnp.float32),
         ]
 
-    return pl.pallas_call(
+    args = (lens[:, None], q, k2, v2)
+    if has_scale:
+        args += (k_scale, v_scale)
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, dh), q.dtype),
+        out_shape=out_shape,
         scratch_shapes=scratch,
         interpret=interpret,
-    )(lens2, q, k2, v2)
+    )(*args)
+    return out[:B] if Bb != B else out
 
 
 def _default_interpret():
     return jax.default_backend() != "tpu"
 
 
-def decode_attention(q, k, v, *, kv_len=None, blk_k=None, interpret=None):
+def decode_attention(q, k, v, *, kv_len=None, blk_k=None, blk_b=None,
+                     interpret=None, k_scale=None, v_scale=None):
     """Fused single-query attention over a KV cache.
 
     q: [B, 1, H, dh]; k/v: [B, T, Hkv, dh] with H divisible by Hkv
@@ -212,7 +271,16 @@ def decode_attention(q, k, v, *, kv_len=None, blk_k=None, interpret=None):
 
     ``blk_k=None`` picks the kv tile per mode: a VMEM-sized block when
     compiled, a wide block when interpreted (per-grid-step interpreter
-    overhead dominates otherwise — ``BENCH_attn.json``).
+    overhead dominates otherwise — ``BENCH_attn.json``). ``blk_b``
+    tiles the *batch* axis of the wide layout (None -> whole batch
+    resident per grid step — at serving batches the extra grid steps
+    cost more interpreter overhead than the smaller block saves; the
+    narrow layout already walks the batch on its grid).
+
+    ``k_scale``/``v_scale``: per-(row, position) [B, T] f32 dequant
+    scales of an int8 cache; the dequant multiply is fused into the
+    K/V block loads so the cache crosses HBM at 1 byte/element
+    (DESIGN.md §12).
     """
     if interpret is None:
         interpret = _default_interpret()
@@ -224,6 +292,8 @@ def decode_attention(q, k, v, *, kv_len=None, blk_k=None, interpret=None):
     T, Hkv = k.shape[1], k.shape[2]
     if H % Hkv:
         raise ValueError(f"H={H} not divisible by Hkv={Hkv}")
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("k_scale and v_scale must be passed together")
     G = H // Hkv
     # query head h belongs to kv head h // G — the same grouping
     # jnp.repeat(k, G, axis=2) realizes — so the reshape is exact.
@@ -234,8 +304,15 @@ def decode_attention(q, k, v, *, kv_len=None, blk_k=None, interpret=None):
         kv_len = jnp.asarray(kv_len, jnp.int32)
         lens = jnp.broadcast_to(kv_len, (B,))
     lens = jnp.minimum(lens, T)
+    if k_scale is not None:
+        k_scale = jnp.broadcast_to(
+            jnp.asarray(k_scale, jnp.float32), (B, T))
+        v_scale = jnp.broadcast_to(
+            jnp.asarray(v_scale, jnp.float32), (B, T))
     from ..obs.trace import named_span
 
     with named_span("kernels.decode_attention"):
-        out = _decode_grouped(qg, k, v, lens, int(blk_k), bool(interpret))
+        out = _decode_grouped(qg, k, v, lens, k_scale, v_scale,
+                              int(blk_k), int(blk_b or B),
+                              bool(interpret))
     return out.reshape(B, 1, H, dh)

@@ -40,6 +40,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.vrmom import _MAD_CONST, _deltas_cached, psi_sum
 
@@ -47,8 +48,12 @@ DEFAULT_TILE = 512        # compiled TPU path: [m_pad, 512] block in VMEM
 INTERPRET_TILE = 65536    # interpret mode: amortize per-grid-step
                           # interpreter overhead (host memory, no VMEM cap)
 
+_NEG_INF = -1e30      # sampling mask for padded vocab columns
+_BIG_IDX = 2 ** 30    # index sentinel for argmax/top-k tie-break
+
 __all__ = [
     "aggregate_pallas",
+    "aggregate_sample_pallas",
     "vrmom_pallas",
     "mom_pallas",
     "trimmed_mean_pallas",
@@ -78,31 +83,32 @@ def _median_of_sorted(xs, m):
     return 0.5 * (xs[(m - 1) // 2] + xs[m // 2])
 
 
-def _kernel(x_ref, o_ref, *, m, m_pad, method, K, k_trim, eps):
-    x = x_ref[...].astype(jnp.float32)  # [m_pad, C]
+def _agg_block(x, *, m, m_pad, method, K, k_trim, eps):
+    """Aggregate one VMEM-resident block over axis 0: [m_pad, ...] -> [...].
+
+    Shared by the plain aggregation kernel and the fused sampling-tail
+    kernel — both run the exact same op sequence, so fused greedy tokens
+    are bit-identical to argmax over the unfused aggregate.
+    """
     if method == "mean":
         # padded rows are +inf: mask them out instead of sorting
         row_valid = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0) < m
-        o_ref[...] = (jnp.sum(jnp.where(row_valid, x, 0.0), axis=0)
-                      / m).astype(o_ref.dtype)
-        return
+        return jnp.sum(jnp.where(row_valid, x, 0.0), axis=0) / m
     xs = _sort_rows(x, m_pad)  # +inf padding sorts past the honest rows
     if method == "trimmed_mean":
         # rows k_trim..m-k_trim-1 of the already-sorted block: the trim
         # is a static slice, so the trimmed mean costs one extra sum.
         seg = xs[k_trim : m - k_trim]
-        o_ref[...] = (jnp.sum(seg, axis=0) / seg.shape[0]).astype(o_ref.dtype)
-        return
-    med = _median_of_sorted(xs, m)  # [C]
+        return jnp.sum(seg, axis=0) / seg.shape[0]
+    med = _median_of_sorted(xs, m)
     if method == "median":
-        o_ref[...] = med.astype(o_ref.dtype)
-        return
+        return med
     # vrmom: MAD scale + quantile-count correction, same VMEM block
-    dev = jnp.abs(x - med[None, :])  # padded rows are +inf already
+    dev = jnp.abs(x - med[None])  # padded rows are +inf already
     devs = _sort_rows(dev, m_pad)
     mad = _median_of_sorted(devs, m)
     s = mad / _MAD_CONST
-    z = (x - med[None, :]) / jnp.maximum(s, eps)[None, :]
+    z = (x - med[None]) / jnp.maximum(s, eps)[None]
     row_valid = jax.lax.broadcasted_iota(jnp.int32, z.shape, 0) < m
     deltas = _deltas_cached(K)
     counts = jnp.zeros_like(z)
@@ -111,7 +117,13 @@ def _kernel(x_ref, o_ref, *, m, m_pad, method, K, k_trim, eps):
     summand = jnp.where(row_valid, counts - K / 2.0, 0.0)
     total = jnp.sum(summand, axis=0)
     out = med - s * total / (m * psi_sum(K))
-    out = jnp.where(s <= eps, med, out)
+    return jnp.where(s <= eps, med, out)
+
+
+def _kernel(x_ref, o_ref, *, m, m_pad, method, K, k_trim, eps):
+    x = x_ref[...].astype(jnp.float32)  # [m_pad, C]
+    out = _agg_block(x, m=m, m_pad=m_pad, method=method, K=K,
+                     k_trim=k_trim, eps=eps)
     o_ref[...] = out.astype(o_ref.dtype)
 
 
@@ -148,6 +160,131 @@ def _agg_2d(x, method: str, K: int, k_trim: int, tile: int, interpret: bool,
     return out[:c]
 
 
+def _topk_rows(vals, idxs, k):
+    """Row-wise top-k of (value, index) pairs along axis 1.
+
+    Descending by value, ties broken toward the smaller index — the same
+    order ``jax.lax.top_k`` produces — via k static max-extraction
+    passes (no sort, no gather). Returns ([B, k], [B, k])."""
+    tv, ti = [], []
+    for _ in range(k):
+        mx = jnp.max(vals, axis=1, keepdims=True)
+        sel = jnp.min(jnp.where(vals == mx, idxs, _BIG_IDX),
+                      axis=1, keepdims=True)
+        tv.append(mx)
+        ti.append(sel)
+        vals = jnp.where(idxs == sel, _NEG_INF, vals)
+    return jnp.concatenate(tv, axis=1), jnp.concatenate(ti, axis=1)
+
+
+def _tail_kernel(x_ref, *refs, m, m_pad, method, K, k_trim, eps, tile,
+                 v_total, n_vt, top_k, with_agg):
+    """Aggregation + sampling epilogue on one [m_pad, B, tile] block.
+
+    The aggregate is computed once per vocab tile; the sampling tail
+    (running argmax for greedy, running top-k otherwise) reuses the same
+    VMEM-resident result, carrying its state across vocab tiles in
+    scratch and writing token ids on the last tile."""
+    refs = list(refs)
+    agg_ref = refs.pop(0) if with_agg else None
+    if top_k == 0:
+        tok_ref, bv_scr, bi_scr = refs
+    else:
+        topv_ref, topi_ref, bv_scr, bi_scr = refs
+    vi = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)  # [m_pad, B, tile]
+    agg = _agg_block(x, m=m, m_pad=m_pad, method=method, K=K,
+                     k_trim=k_trim, eps=eps)  # [B, tile]
+    if with_agg:
+        agg_ref[...] = agg.astype(agg_ref.dtype)
+    # mask the padded tail of the vocab axis so it can never win the
+    # argmax/top-k (the pad value is a live logit magnitude, not -inf)
+    pos = vi * tile + jax.lax.broadcasted_iota(jnp.int32, agg.shape, 1)
+    a = jnp.where(pos < v_total, agg, _NEG_INF)
+
+    @pl.when(vi == 0)
+    def _init():
+        bv_scr[...] = jnp.full(bv_scr.shape, _NEG_INF, jnp.float32)
+        bi_scr[...] = jnp.zeros(bi_scr.shape, jnp.int32)
+
+    if top_k == 0:
+        tile_max = jnp.max(a, axis=1, keepdims=True)  # [B, 1]
+        tile_idx = jnp.min(jnp.where(a == tile_max, pos, _BIG_IDX),
+                           axis=1, keepdims=True)
+        # strict >: an equal max in a later tile never displaces the
+        # earlier index, matching jnp.argmax first-occurrence ties
+        better = tile_max > bv_scr[...]
+        bi_scr[...] = jnp.where(better, tile_idx, bi_scr[...])
+        bv_scr[...] = jnp.where(better, tile_max, bv_scr[...])
+
+        @pl.when(vi == n_vt - 1)
+        def _write_tok():
+            tok_ref[...] = bi_scr[:, 0]
+    else:
+        tv, ti = _topk_rows(a, pos, top_k)
+        mv, mi = _topk_rows(jnp.concatenate([bv_scr[...], tv], axis=1),
+                            jnp.concatenate([bi_scr[...], ti], axis=1),
+                            top_k)
+        bv_scr[...] = mv
+        bi_scr[...] = mi
+
+        @pl.when(vi == n_vt - 1)
+        def _write_topk():
+            topv_ref[...] = bv_scr[...]
+            topi_ref[...] = bi_scr[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("method", "K", "k_trim", "tile", "interpret", "eps",
+                     "top_k", "with_agg"),
+)
+def _tail_3d(x, method: str, K: int, k_trim: int, tile: int, interpret: bool,
+             eps: float, top_k: int, with_agg: bool):
+    m, b, v = x.shape
+    m_pad = m + (m % 2)  # sorting network wants an even row count
+    tile = max(min(tile, max(v, 1)), max(top_k, 1))
+    v_pad = -(-v // tile) * tile
+    n_vt = v_pad // tile
+    xp = _pad_rows(x, m_pad)
+    if v_pad != v:
+        xp = jnp.pad(xp, ((0, 0), (0, 0), (0, v_pad - v)),
+                     constant_values=1.0)
+    out_shape, out_specs = [], []
+    if with_agg:
+        out_shape.append(jax.ShapeDtypeStruct((b, v_pad), x.dtype))
+        out_specs.append(pl.BlockSpec((b, tile), lambda i: (0, i)))
+    if top_k == 0:
+        out_shape.append(jax.ShapeDtypeStruct((b,), jnp.int32))
+        out_specs.append(pl.BlockSpec((b,), lambda i: (0,)))
+        scratch = [pltpu.VMEM((b, 1), jnp.float32),
+                   pltpu.VMEM((b, 1), jnp.int32)]
+    else:
+        out_shape.append(jax.ShapeDtypeStruct((b, top_k), jnp.float32))
+        out_specs.append(pl.BlockSpec((b, top_k), lambda i: (0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((b, top_k), jnp.int32))
+        out_specs.append(pl.BlockSpec((b, top_k), lambda i: (0, 0)))
+        scratch = [pltpu.VMEM((b, top_k), jnp.float32),
+                   pltpu.VMEM((b, top_k), jnp.int32)]
+    outs = pl.pallas_call(
+        functools.partial(_tail_kernel, m=m, m_pad=m_pad, method=method,
+                          K=K, k_trim=k_trim, eps=eps, tile=tile,
+                          v_total=v, n_vt=n_vt, top_k=top_k,
+                          with_agg=with_agg),
+        grid=(n_vt,),
+        in_specs=[pl.BlockSpec((m_pad, b, tile), lambda i: (0, 0, i))],
+        out_specs=tuple(out_specs),
+        out_shape=tuple(out_shape),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(xp)
+    outs = list(outs)
+    agg = outs.pop(0)[:, :v] if with_agg else None
+    if top_k == 0:
+        return agg, outs[0]
+    return agg, outs[0], outs[1]
+
+
 def _default_interpret():
     return jax.default_backend() != "tpu"
 
@@ -164,6 +301,19 @@ def aggregate_pallas(x, method: str = "vrmom", K: int = 10, beta: float = 0.1,
     ``BENCH_agg.json``). Dispatch policy lives in
     ``core.estimator.Estimator``; this is the execution entry point.
     """
+    method, k_trim, tile, interpret = _resolve_call(
+        method, beta, x.shape[0], tile, interpret)
+    shape = x.shape[1:]
+    x2 = x.reshape(x.shape[0], -1)
+    from ..obs.trace import named_span
+
+    with named_span("kernels.aggregate"):
+        out = _agg_2d(x2, method=method, K=K, k_trim=k_trim, tile=tile,
+                      interpret=interpret, eps=eps)
+    return out.reshape(shape)
+
+
+def _resolve_call(method, beta, m, tile, interpret):
     if interpret is None:
         interpret = _default_interpret()
     if tile is None:
@@ -171,7 +321,6 @@ def aggregate_pallas(x, method: str = "vrmom", K: int = 10, beta: float = 0.1,
     method = "median" if method == "mom" else method
     if method not in ("median", "vrmom", "trimmed_mean", "mean"):
         raise ValueError(f"no fused kernel for method {method!r}")
-    m = x.shape[0]
     k_trim = 0
     if method == "trimmed_mean":
         k_trim = int(beta * m)
@@ -180,14 +329,40 @@ def aggregate_pallas(x, method: str = "vrmom", K: int = 10, beta: float = 0.1,
                 f"trimmed_mean kernel: beta={beta} at m={m} trims "
                 f"{k_trim} rows per end — spec must be validated "
                 f"(Estimator.validate) before dispatch")
-    shape = x.shape[1:]
-    x2 = x.reshape(m, -1)
+    return method, k_trim, tile, bool(interpret)
+
+
+def aggregate_sample_pallas(x, method: str = "vrmom", K: int = 10,
+                            beta: float = 0.1, top_k: int = 0, tile=None,
+                            interpret=None, eps: float = 1e-12,
+                            with_agg: bool = True):
+    """Fused aggregation + sampling tail over a ``[m, B, V]`` logit stack.
+
+    One Pallas dispatch does what the unfused robust-decode tail did in
+    two (aggregate kernel, then a jnp argmax/top-k pass over the [B, V]
+    aggregate written back to HBM): the sampling epilogue runs on the
+    aggregate while it is still VMEM-resident.
+
+    Returns ``(agg, tok)`` for ``top_k == 0`` — greedy, ``tok[b]``
+    bit-identical to ``jnp.argmax(agg[b])`` — or ``(agg, topv, topi)``
+    for ``top_k > 0`` with the ``jax.lax.top_k`` value/index order, so a
+    categorical draw over ``topv`` reproduces the masked-vocab top-k
+    sampling distribution. ``with_agg=False`` skips the [B, V] aggregate
+    write entirely (greedy serve steps with diagnostics off) and returns
+    ``agg=None``.
+    """
+    if x.ndim != 3:
+        raise ValueError(f"fused tail wants [m, B, V] stacks, got {x.shape}")
+    if not 0 <= top_k <= x.shape[-1]:
+        raise ValueError(f"top_k={top_k} out of range for V={x.shape[-1]}")
+    method, k_trim, tile, interpret = _resolve_call(
+        method, beta, x.shape[0], tile, interpret)
     from ..obs.trace import named_span
 
-    with named_span("kernels.aggregate"):
-        out = _agg_2d(x2, method=method, K=K, k_trim=k_trim, tile=tile,
-                      interpret=bool(interpret), eps=eps)
-    return out.reshape(shape)
+    with named_span("kernels.aggregate_sample"):
+        return _tail_3d(x, method=method, K=K, k_trim=k_trim, tile=tile,
+                        interpret=interpret, eps=eps, top_k=int(top_k),
+                        with_agg=bool(with_agg))
 
 
 def vrmom_pallas(x, K: int = 10, tile=None, interpret=None,

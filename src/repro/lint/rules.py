@@ -468,7 +468,10 @@ class UnmaskedPaddedLoadRule(Rule):
     decode-attention discipline (DESIGN §8) is that validity is masked
     *in-kernel* (jnp.where over a broadcasted_iota position, or an
     explicitly inert pad value). A kernel with padded inputs and no
-    masking construct is flagged."""
+    masking construct is flagged. The mask may live in a same-module
+    helper the kernel calls (kernel families sharing an epilogue, e.g.
+    ``vrmom._agg_block``) — the scan follows direct calls to
+    module-level functions."""
 
     id = "RL006"
 
@@ -481,13 +484,20 @@ class UnmaskedPaddedLoadRule(Rule):
             return arg.args[0].id
         return None
 
-    def _has_mask(self, fn: ast.AST) -> bool:
+    def _has_mask(self, fn: ast.AST, defs=None, seen=None) -> bool:
+        seen = set() if seen is None else seen
         for node in ast.walk(fn):
             if isinstance(node, ast.Call):
                 d = _dotted(node.func)
                 if d.endswith(".where") or d.endswith("broadcasted_iota") \
                         or d == "where":
                     return True
+                # masking via a shared same-module helper counts: follow
+                # plain-name calls to module-level defs (one pass each)
+                if defs and d in defs and d not in seen:
+                    seen.add(d)
+                    if self._has_mask(defs[d], defs, seen):
+                        return True
         return False
 
     def check(self, tree, src, relpath):
@@ -529,7 +539,7 @@ class UnmaskedPaddedLoadRule(Rule):
                        for n in ast.walk(enclosing))
             if not pads or kernel is None:
                 continue
-            if not self._has_mask(kernel):
+            if not self._has_mask(kernel, defs):
                 yield self.finding(
                     relpath, node.lineno,
                     f"pallas_call kernel `{kernel.name}` receives "

@@ -27,11 +27,44 @@ from .layers import dense_init, rmsnorm, rope
 
 NEG_INF = -1e30
 
+# KV-cache storage dtypes (cfg.kv_dtype, DESIGN.md §12). Quantization is
+# write-side only: Q/K/V are computed in compute_dtype, the cache stores
+# the narrow form, and dequantization happens at read time (fused into
+# the decode-attention kernel's block loads on the flash backend).
+KV_DTYPES = ("float32", "bfloat16", "int8")
+
 
 class KVCache(NamedTuple):
     k: jnp.ndarray  # [B, T, Hkv, dh] (T = max_len or window size)
     v: jnp.ndarray
     pos: jnp.ndarray  # [] int32 — number of tokens already written
+    # int8 KV only: per-(row, position) f32 dequant scales [B, T],
+    # carried beside the cache exactly like ``pos`` (None otherwise, so
+    # unquantized cache trees keep their pre-§12 structure — None is not
+    # a pytree leaf and every structural probe/tree.map skips it).
+    k_scale: Optional[jnp.ndarray] = None
+    v_scale: Optional[jnp.ndarray] = None
+
+
+def kv_dtype(cfg):
+    """The cache storage dtype: ``cfg.kv_dtype`` or compute_dtype."""
+    return jnp.dtype(getattr(cfg, "kv_dtype", None) or cfg.compute_dtype)
+
+
+def quantize_kv(x, dt):
+    """Quantize fresh K/V rows ``[B, S, Hkv, dh]`` for cache storage.
+
+    Returns ``(stored, scale)``: int8 uses a symmetric per-(row,
+    position) scale over the [Hkv, dh] tail — each cache position is
+    quantized exactly once, at write time, and never requantized — any
+    other dtype is a plain cast with ``scale=None``.
+    """
+    if dt == jnp.int8:
+        s = jnp.max(jnp.abs(x), axis=(2, 3)).astype(jnp.float32) / 127.0
+        s = jnp.maximum(s, 1e-8)  # all-zero rows (padding) stay zero
+        q = jnp.round(x.astype(jnp.float32) / s[:, :, None, None])
+        return jnp.clip(q, -127.0, 127.0).astype(jnp.int8), s
+    return x.astype(dt), None
 
 
 def attn_init(key, cfg, d_model=None, cross: bool = False):
@@ -199,7 +232,11 @@ def attn_forward(p, x, cfg, *, positions, causal=True, window="cfg",
                 ck, cv = jnp.pad(k, padw), jnp.pad(v, padw)
             else:
                 ck, cv = k[:, :T], v[:, :T]
-        cache = KVCache(k=ck, v=cv, pos=jnp.asarray(S, jnp.int32))
+        dt = kv_dtype(cfg)
+        ck, ks = quantize_kv(ck, dt)
+        cv, vs = quantize_kv(cv, dt)
+        cache = KVCache(k=ck, v=cv, pos=jnp.asarray(S, jnp.int32),
+                        k_scale=ks, v_scale=vs)
     return out, cache
 
 
@@ -207,11 +244,15 @@ def init_cache(cfg, batch: int, max_len: int, window: Optional[int] = None,
                d_model=None):
     """Empty KV cache. With a window, the cache is a ring of that size."""
     T = min(window, max_len) if window else max_len
-    dt = jnp.dtype(cfg.compute_dtype)
+    dt = kv_dtype(cfg)
     shape = (batch, T, cfg.n_kv_heads, cfg.head_dim)
+    ks = vs = None
+    if dt == jnp.int8:
+        ks = jnp.zeros((batch, T), jnp.float32)
+        vs = jnp.zeros((batch, T), jnp.float32)
     return KVCache(
         k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt),
-        pos=jnp.asarray(0, jnp.int32),
+        pos=jnp.asarray(0, jnp.int32), k_scale=ks, v_scale=vs,
     )
 
 
@@ -233,23 +274,38 @@ def attn_decode(p, x1, cfg, cache: KVCache, *, window="cfg"):
     q, k, v = _qkv(p, x1, cfg, positions)
     T = cache.k.shape[1]
     slot = jnp.mod(pos, T) if window else jnp.minimum(pos, T - 1)
+    # quantize the fresh K/V row once, at write time (no-op cast when the
+    # cache dtype matches compute_dtype)
+    k, ks1 = quantize_kv(k, cache.k.dtype)
+    v, vs1 = quantize_kv(v, cache.v.dtype)
+    kscale, vscale = cache.k_scale, cache.v_scale
     if per_row:
         upd = jax.vmap(
             lambda c, u, s: jax.lax.dynamic_update_slice(c, u, (s, 0, 0)))
         ck = upd(cache.k, k, slot)
         cv = upd(cache.v, v, slot)
+        if ks1 is not None:
+            upd1 = jax.vmap(
+                lambda c, u, s: jax.lax.dynamic_update_slice(c, u, (s,)))
+            kscale = upd1(kscale, ks1, slot)
+            vscale = upd1(vscale, vs1, slot)
     else:
         ck = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
         cv = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+        if ks1 is not None:
+            kscale = jax.lax.dynamic_update_slice(kscale, ks1, (0, slot))
+            vscale = jax.lax.dynamic_update_slice(vscale, vs1, (0, slot))
     # Ring buffer (window set): all T slots valid once pos >= T; slot
     # positions don't matter for masking beyond validity (window == ring
     # size). Linear cache: the first pos+1 slots are valid.
     kv_len = jnp.minimum(pos + 1, T) if window else pos + 1
     from . import attn_backend as AB
 
-    out = AB.decode_attention(q, ck, cv, cfg, kv_len=kv_len)
+    out = AB.decode_attention(q, ck, cv, cfg, kv_len=kv_len,
+                              k_scale=kscale, v_scale=vscale)
     out = _out_proj(out, p["wo"])
-    return out, KVCache(k=ck, v=cv, pos=pos + 1)
+    return out, KVCache(k=ck, v=cv, pos=pos + 1,
+                        k_scale=kscale, v_scale=vscale)
 
 
 def cross_attn_decode(p, x1, cfg, cross_kv: KVCache):

@@ -118,12 +118,19 @@ def full_attention(q, k, v, cfg, *, causal, window, q_offset=0, kv_len=None):
                  q_offset=q_offset, kv_len=kv_len)
 
 
-def decode_attention(q, k, v, cfg, *, kv_len=None):
+def decode_attention(q, k, v, cfg, *, kv_len=None, k_scale=None,
+                     v_scale=None):
     """Single-query cached attention [B,1,H,dh] x [B,T,Hkv,dh].
 
     The decode hot loop. ``kv_len``: scalar or per-row [B] valid cache
     length (slot serving); ring caches mask by validity only, so both
     cache geometries take the same kernel (DESIGN.md §6/§8).
+
+    ``k_scale``/``v_scale``: per-(row, position) [B, T] f32 dequant
+    scales of an int8 KV cache (DESIGN.md §12). The flash kernel fuses
+    the dequant into its K/V block loads; the jnp reference dequantizes
+    eagerly before ``mha``. bf16 caches carry no scales — both paths
+    already upcast at read.
     """
     from . import attention as A
 
@@ -131,5 +138,10 @@ def decode_attention(q, k, v, cfg, *, kv_len=None):
     if resolve_backend(backend, decode=True) == "flash":
         from ..kernels.decode_attention import decode_attention as _da
 
-        return _da(q, k, v, kv_len=kv_len)
+        return _da(q, k, v, kv_len=kv_len, k_scale=k_scale, v_scale=v_scale)
+    if k_scale is not None:
+        k = k.astype(jnp.float32) * k_scale[:, :, None, None]
+        v = v.astype(jnp.float32) * v_scale[:, :, None, None]
+        k = k.astype(q.dtype)
+        v = v.astype(q.dtype)
     return A.mha(q, k, v, causal=False, window=None, chunk=1, kv_len=kv_len)

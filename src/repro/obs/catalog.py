@@ -86,6 +86,9 @@ METRICS = (
                "Per-token fraction of decode replicas whose argmax "
                "differs from the robustly aggregated token.",
                FRACTION_EDGES),
+    MetricInfo("serve.kv_bytes_per_slot", "gauge", "bytes",
+               "KV-cache HBM bytes one pool slot costs (quantization "
+               "scales and robust replica stacking included)."),
     # -- robust aggregation diagnostics (train path) ------------------------
     MetricInfo("agg.alpha_hat", "gauge", "fraction",
                "Online effective-alpha estimate: fraction of workers "

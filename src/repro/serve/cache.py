@@ -33,6 +33,7 @@ __all__ = [
     "SlotPool",
     "vectorize_pos",
     "slot_dims",
+    "kv_bytes_per_slot",
     "init_pool",
     "write_slot",
     "evict_slot",
@@ -98,6 +99,21 @@ def slot_dims(make, n_a: int = 2, n_b: int = 3):
         return diffs[0] if diffs else _NO_SLOT_DIM
 
     return jax.tree.map(one, sa, sb)
+
+
+def kv_bytes_per_slot(make, n_slots: int) -> int:
+    """HBM bytes one slot costs in the cache tree built by ``make``.
+
+    Probed under ``eval_shape`` (no allocation): sum of leaf byte sizes
+    — int8 quantization scales included, which is the point: the gauge
+    reports the *stored* footprint, so ``kv_dtype`` shrinking the cache
+    shows up directly. Replica-stacked robust trees count every
+    replica's bytes (they all occupy HBM per slot).
+    """
+    tree = jax.eval_shape(lambda: make(n_slots))
+    total = sum(int(x.size) * x.dtype.itemsize
+                for x in jax.tree.leaves(tree))
+    return total // n_slots
 
 
 def init_pool(cfg, n_slots: int, max_len: int, window="cfg") -> SlotPool:

@@ -86,7 +86,8 @@ class ServeEngine:
 
     def __init__(self, cfg, params, *, max_len: int, n_slots: int = 4,
                  window="cfg", robust: Optional[R.RobustDecodeConfig] = None,
-                 attn_backend: Optional[str] = None, obs=None):
+                 attn_backend: Optional[str] = None,
+                 kv_dtype: Optional[str] = None, obs=None):
         if attn_backend is not None:
             import dataclasses
 
@@ -96,6 +97,15 @@ class ServeEngine:
                 raise ValueError(f"unknown attn backend {attn_backend!r}; "
                                  f"known: {BACKENDS}")
             cfg = dataclasses.replace(cfg, attn_backend=attn_backend)
+        if kv_dtype is not None:
+            import dataclasses
+
+            from ..models.attention import KV_DTYPES
+
+            if kv_dtype not in KV_DTYPES:
+                raise ValueError(f"unknown kv dtype {kv_dtype!r}; "
+                                 f"known: {KV_DTYPES}")
+            cfg = dataclasses.replace(cfg, kv_dtype=kv_dtype)
         self.cfg = cfg
         self.params = params
         self.max_len = int(max_len)
@@ -103,9 +113,24 @@ class ServeEngine:
         self.window = window
         self.robust = robust
         self.obs = obs
+        # replicated emulation: replica state actually materialized
+        # [m, ...] and every replica's forward executed. The default
+        # (share_replica_compute) keeps plain-shaped state — one forward
+        # feeds the whole logit stack (see RobustDecodeConfig).
+        self._replicated = (robust is not None
+                            and not robust.share_replica_compute)
         self._fns = {}
         self._dims = C.slot_dims(self._pool_caches)
-        if robust is not None:
+        if obs is not None:
+            # capacity gauge: KV bytes one slot costs (scales included,
+            # and the m-fold replica stacking when the emulation
+            # replicates state), from the abstract pool spec — no
+            # allocation. Quantized KV shows up here as the
+            # halved/quartered per-slot footprint.
+            obs.gauge("serve.kv_bytes_per_slot",
+                      float(C.kv_bytes_per_slot(self._pool_caches,
+                                                self.n_slots)))
+        if self._replicated:
             # batch-dim indices of the UNSTACKED pool tree: the replica
             # dim the probe saw at axis 0 shifts every slot dim by one.
             self._pool_flat_dims = jax.tree.map(
@@ -117,14 +142,14 @@ class ServeEngine:
     def _pool_caches(self, n_slots: int):
         caches = C._pool_caches(self.cfg, n_slots, self.max_len,
                                 window=self.window)
-        if self.robust is not None:
+        if self._replicated:
             caches = R.stack_replicas(caches, self.robust.m)
         return caches
 
     def make_pool(self) -> C.SlotPool:
         pool = C.init_pool(self.cfg, self.n_slots, self.max_len,
                            window=self.window)
-        if self.robust is not None:
+        if self._replicated:
             pool = pool._replace(
                 caches=R.stack_replicas(pool.caches, self.robust.m))
         return pool
@@ -166,14 +191,19 @@ class ServeEngine:
             dims = self._prefill_dims_cache[key] = C.slot_dims(make)
         return dims
 
-    def _decode_loop_fn(self, n_steps: int, sc: Sampling, pool: bool):
+    def _decode_loop_fn(self, n_steps: int, sc: Sampling, pool: bool,
+                        donate: bool = False):
         """Fused decode: one dispatch for ``n_steps`` steps of
         decode -> (attack/aggregate) -> sample, caches carried in-scan.
 
-        Robust decode runs replica-FLAT (``robust.flatten_replicas``):
-        the m replicas ride the batch dim through one ``decode_step``
-        call per scan step, the [m*B, V] logits reshape to the [m, B, V]
-        wire stack, and the fused Estimator kernel aggregates it in-scan.
+        Robust decode with ``share_replica_compute`` (default) runs ONE
+        ``decode_step`` per scan step and broadcasts its logits into the
+        [m, B, V] wire stack (honest replicas are bit-identical — see
+        RobustDecodeConfig); the replicated emulation instead runs
+        replica-FLAT (``robust.flatten_replicas``): the m replicas ride
+        the batch dim through one ``decode_step`` call at batch m*B, and
+        the [m*B, V] logits reshape to the wire stack. Either way the
+        fused Estimator kernel aggregates the stack in-scan.
         The pool path passes (and receives) the replica-STACKED layout —
         admit/evict write [m, ...] rows — and the layout round-trip
         happens inside the jitted program so XLA fuses it with the
@@ -183,7 +213,7 @@ class ServeEngine:
         """
         rcfg = self.robust
         flat_dims = (self._pool_flat_dims
-                     if pool and rcfg is not None else None)
+                     if pool and self._replicated else None)
         # Telemetry variant: a distinct compiled program (diag joins the
         # cache key) whose scan additionally emits the per-token replica-
         # disagreement rates, folded post-scan into a static-shape
@@ -191,6 +221,12 @@ class ServeEngine:
         # computed identically — the diag aux reads the logit stack and
         # never feeds back.
         diag = self.obs is not None and rcfg is not None
+        # Greedy sampling with no simulated attack consumes no
+        # randomness — skip the per-step threefry split (a measurable
+        # slice of the step on a host-bound box). Token-identical: the
+        # skipped keys were never read.
+        stochastic = sc.method != "greedy" or (
+            rcfg is not None and rcfg.attack != "none")
 
         def run(params, caches, tok, key, active=None):
             # active: optional [B] bool — pool-path slot liveness. Only
@@ -202,24 +238,39 @@ class ServeEngine:
 
             def body(carry, _):
                 tok, caches, key = carry
-                key, akey, skey = jax.random.split(key, 3)
+                if stochastic:
+                    key, akey, skey = jax.random.split(key, 3)
+                else:
+                    akey = skey = key
                 dis = None
                 if rcfg is not None:
-                    flat_tok = jnp.tile(tok, rcfg.m)  # replica-major rows
-                    logits_f, caches = M.decode_step(params, self.cfg, caches,
-                                                     flat_tok,
-                                                     window=self.window)
-                    logits_r = logits_f.reshape((rcfg.m, tok.shape[0])
-                                                + logits_f.shape[1:])
-                    if diag:
-                        logits, dis = R.robust_logits(logits_r, rcfg, akey,
-                                                      with_diag=True)
+                    if rcfg.share_replica_compute:
+                        # one forward feeds the whole wire stack — the
+                        # replicas are bit-identical deterministic
+                        # functions of the same carry (config docstring)
+                        logits, caches = M.decode_step(params, self.cfg,
+                                                       caches, tok,
+                                                       window=self.window)
+                        logits_r = jnp.broadcast_to(
+                            logits, (rcfg.m,) + logits.shape)
                     else:
-                        logits = R.robust_logits(logits_r, rcfg, akey)
+                        flat_tok = jnp.tile(tok, rcfg.m)  # replica-major
+                        logits_f, caches = M.decode_step(params, self.cfg,
+                                                         caches, flat_tok,
+                                                         window=self.window)
+                        logits_r = logits_f.reshape((rcfg.m, tok.shape[0])
+                                                    + logits_f.shape[1:])
+                    # the whole tail — attack, aggregate, sample — is one
+                    # fused dispatch when rcfg.fuse_tail (DESIGN.md §12)
+                    if diag:
+                        nxt, dis = R.robust_sample(logits_r, rcfg, akey,
+                                                   skey, sc, with_diag=True)
+                    else:
+                        nxt = R.robust_sample(logits_r, rcfg, akey, skey, sc)
                 else:
                     logits, caches = M.decode_step(params, self.cfg, caches,
                                                    tok, window=self.window)
-                nxt = sample_tokens(logits, skey, sc)
+                    nxt = sample_tokens(logits, skey, sc)
                 return (nxt, caches, key), (nxt, dis) if diag else nxt
 
             from ..obs.trace import named_span
@@ -239,8 +290,14 @@ class ServeEngine:
                                                 mask=mask)
             return ys, caches  # ys: toks [n_steps, B]
 
-        return self._fn(("loop", n_steps, sc, pool, diag),
-                        lambda: jax.jit(run))
+        # donate=True hands the caches buffer to XLA so the scan carry
+        # reuses it in place instead of copying ~MB of KV at entry.
+        # Only the generate() path asks for it — its caches are freshly
+        # built per call and never touched again; pool/benchmark callers
+        # re-feed the same caches across calls, which donation forbids.
+        return self._fn(("loop", n_steps, sc, pool, diag, donate),
+                        lambda: jax.jit(
+                            run, donate_argnums=(1,) if donate else ()))
 
     def _decode_step_fn(self, sc: Sampling):
         """Single-step dispatch — the Python-loop baseline the scan
@@ -299,8 +356,8 @@ class ServeEngine:
             if rcfg is not None:
                 rep = jnp.broadcast_to(logits[None],
                                        (rcfg.m,) + logits.shape)
-                logits = R.robust_logits(rep, rcfg,
-                                         key=jax.random.fold_in(key, 1))
+                return R.robust_sample(rep, rcfg, jax.random.fold_in(key, 1),
+                                       jax.random.fold_in(key, 0), sc)
             return sample_tokens(logits, jax.random.fold_in(key, 0), sc)
 
         return self._fn(("first", sc), lambda: jax.jit(run))(logits, key)
@@ -327,9 +384,10 @@ class ServeEngine:
         tok = self._first_token(logits, key, sampling)
         if n_tokens == 1:
             return tok[:, None]
-        if self.robust is not None:
+        if self._replicated:
             caches = self._stack_flatten_fn(batch)(caches)
-        out = self._decode_loop_fn(n_tokens - 1, sampling, pool=False)(
+        out = self._decode_loop_fn(n_tokens - 1, sampling, pool=False,
+                                   donate=True)(
             self.params, caches, tok, key)
         toks = out[0]
         if len(out) == 3:
@@ -343,7 +401,7 @@ class ServeEngine:
         self._check_capacity(batch["tokens"].shape[1], n_tokens)
         key = jax.random.PRNGKey(0) if key is None else key
         logits, caches = self.prefill(batch)
-        if self.robust is not None:
+        if self._replicated:
             caches = R.stack_replicas(caches, self.robust.m)
         tok = self._first_token(logits, key, sampling)
         step = self._decode_step_fn(sampling)
@@ -374,7 +432,7 @@ class ServeEngine:
         key = jax.random.PRNGKey(int(slot)) if key is None else key
         logits, caches = self.prefill(batch)
         caches = C.vectorize_pos(caches, 1)
-        if self.robust is not None:
+        if self._replicated:
             caches = R.stack_replicas(caches, self.robust.m)
         pool = C.write_slot(pool, self._dims, caches, slot, prompt_len)
         tok = self._first_token(logits, key, sampling)

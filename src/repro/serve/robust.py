@@ -51,6 +51,7 @@ __all__ = [
     "flatten_replicas",
     "unflatten_replicas",
     "robust_logits",
+    "robust_sample",
     "robust_decode_step",
 ]
 
@@ -73,6 +74,33 @@ class RobustDecodeConfig:
     attack:     ``core/attacks`` name injected on the corrupted rows
                 ("none" in production — real faults need no simulation).
     alpha:      corrupted fraction; floor(alpha * m) rows are attacked.
+    share_replica_compute:
+                single-host emulation mode. The attack model is
+                logit-level (``core/attacks`` corrupts rows of the
+                [m, B, V] stack, never replica state), every replica is
+                the same deterministic function of (params, cache,
+                aggregated token), and all replicas consume the same
+                aggregated feedback — so honest replica caches stay
+                bit-identical forever and the m decode forwards compute
+                the same rows m times. ``True`` (default) computes the
+                forward ONCE and broadcasts its logits into the [m, B,
+                V] wire stack: tokens are bit-identical to the
+                replicated emulation (the same argument ``_first_token``
+                already makes for the prefill logits), per-slot KV
+                drops m-fold, and wall-clock matches a deployment whose
+                m workers run in parallel. ``False`` keeps the
+                replicated-forward emulation — every replica's forward
+                executed serially — as the reference the equivalence is
+                tested against (and the honest cost model for a host
+                that really must run all m replicas itself).
+    fuse_tail:  run aggregation + sampling as ONE Pallas dispatch
+                (``Estimator.apply_sample``, DESIGN.md §12) when the
+                resolved backend is the fused kernel and the sampling
+                method has a fused epilogue (greedy / top-k). ``False``
+                restores the unfused tail — aggregate kernel, then a jnp
+                argmax/top-k pass — which the fusion-attribution
+                benchmark uses as its baseline. Greedy tokens are
+                bit-identical either way.
 
     The spec is validated against ``m`` at construction (trace time):
     a trimmed_mean that trims zero rows, or a whole-vector estimator
@@ -85,6 +113,8 @@ class RobustDecodeConfig:
     K: int = 8
     attack: str = "none"
     alpha: float = 0.25
+    fuse_tail: bool = True
+    share_replica_compute: bool = True
 
     def __post_init__(self):
         est = self.estimator
@@ -208,6 +238,58 @@ def robust_logits(logits_r, rcfg: RobustDecodeConfig,
     return agg
 
 
+def robust_sample(logits_r, rcfg: RobustDecodeConfig,
+                  key: Optional[jax.Array], skey, sc, *,
+                  with_diag: bool = False):
+    """The whole robust-decode tail: attack, aggregate, sample.
+
+    logits_r: [m, B, V] per-replica logits; ``key`` the attack-injection
+    key (may be None when ``rcfg.attack == "none"``), ``skey`` the
+    sampling key, ``sc`` an ``engine.Sampling``. Returns ``tok [B]
+    int32`` (plus the replica-disagreement rate ``[B] f32`` when
+    ``with_diag``).
+
+    With ``rcfg.fuse_tail`` and a greedy/top-k sampling method this is
+    ONE fused dispatch (``Estimator.apply_sample``, DESIGN.md §12):
+    aggregation and token selection share the VMEM-resident aggregate,
+    and for greedy-without-diagnostics the [B, V] aggregate is never
+    written back to HBM at all. Greedy tokens are bit-identical to
+    ``sample_tokens(robust_logits(...))``; top-k draws the categorical
+    over the fused kernel's [B, k] (value, index) lists, reproducing the
+    masked-vocab sampling distribution. Temperature-only sampling needs
+    the full [B, V] aggregate and always takes the unfused tail.
+    """
+    if not (rcfg.fuse_tail and sc.method in ("greedy", "top_k")):
+        from .engine import sample_tokens
+
+        out = robust_logits(logits_r, rcfg, key, with_diag=with_diag)
+        agg, dis = out if with_diag else (out, None)
+        tok = sample_tokens(agg, skey, sc)
+        return (tok, dis) if with_diag else tok
+    if rcfg.attack != "none":
+        if key is None:
+            raise ValueError("attack injection needs a PRNG key")
+        mask = replica_mask(rcfg.m, rcfg.alpha)
+        logits_r = ATK.get(rcfg.attack)(key, logits_r, mask)
+    x = logits_r.astype(jnp.float32)
+    if sc.method == "greedy":
+        agg, tok = rcfg.estimator.apply_sample(x, with_agg=with_diag)
+    else:
+        if sc.top_k <= 0:
+            raise ValueError("top_k sampling needs top_k > 0")
+        agg, topv, topi = rcfg.estimator.apply_sample(
+            x, top_k=sc.top_k, with_agg=with_diag)
+        l = topv / max(sc.temperature, 1e-6)
+        idx = jax.random.categorical(skey, l, axis=-1)
+        tok = jnp.take_along_axis(topi, idx[:, None], axis=1)[:, 0]
+        tok = tok.astype(jnp.int32)
+    if with_diag:
+        from ..obs.diag import replica_disagreement
+
+        return tok, replica_disagreement(logits_r, agg)
+    return tok
+
+
 def robust_decode_step(params, cfg, rep_caches, token,
                        rcfg: RobustDecodeConfig,
                        key: Optional[jax.Array] = None, window="cfg"):
@@ -224,7 +306,17 @@ def robust_decode_step(params, cfg, rep_caches, token,
     form instead (``flatten_replicas``: one ``decode_step`` at batch
     m*B) — this vmapped version is the reference and the per-step
     debugging baseline.
+
+    With ``rcfg.share_replica_compute`` the caches are UNstacked (plain
+    [B, ...] state): one forward runs and its logits broadcast into the
+    replica stack — see the config docstring for why that is
+    token-identical to the vmapped form.
     """
+    if rcfg.share_replica_compute:
+        logits, new_caches = M.decode_step(params, cfg, rep_caches, token,
+                                           window=window)
+        logits_r = jnp.broadcast_to(logits, (rcfg.m,) + logits.shape)
+        return robust_logits(logits_r, rcfg, key), new_caches
     logits_r, new_caches = jax.vmap(
         lambda c: M.decode_step(params, cfg, c, token,
                                 window=window))(rep_caches)

@@ -166,3 +166,98 @@ def test_resolve_backend_policy():
         "flash" if on_tpu else "jnp")
     with pytest.raises(ValueError, match="unknown attn backend"):
         AB.resolve_backend("cuda", decode=True)
+
+
+# ----------------------------------------------------- quantized KV cache
+
+from repro.models.attention import quantize_kv
+
+
+def test_quantize_kv_int8_roundtrip():
+    """Symmetric per-(row, position) int8: round-trip error bounded by
+    one quantization step of that position's own scale."""
+    x = 3.0 * jax.random.normal(jax.random.PRNGKey(0), (2, 9, 4, 16))
+    xi, s = quantize_kv(x, jnp.int8)
+    assert xi.dtype == jnp.int8 and s.shape == (2, 9) and s.dtype == jnp.float32
+    rt = xi.astype(jnp.float32) * s[:, :, None, None]
+    step = jnp.max(jnp.abs(x), axis=(2, 3)) / 127.0
+    assert float(jnp.max(jnp.abs(rt - x) - step[:, :, None, None])) <= 1e-6
+
+
+def test_quantize_kv_bf16_cast():
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 2, 8))
+    xb, s = quantize_kv(x, jnp.bfloat16)
+    assert s is None and xb.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(xb, np.float32), np.asarray(x),
+                               rtol=1e-2, atol=1e-2)
+
+
+def test_decode_kernel_int8_fused_dequant():
+    """int8 K/V with per-position scales inside the kernel == eager
+    dequantize + f32 kernel (the dequant rides the block load)."""
+    B, H, Hkv, dh, T = 3, 8, 2, 32, 60
+    q, k, v = _qkv(jax.random.PRNGKey(3), B, H, Hkv, dh, T)
+    lens = jnp.asarray([13, 60, 41])
+    kq, ks = quantize_kv(k, jnp.int8)
+    vq, vs = quantize_kv(v, jnp.int8)
+    kd = kq.astype(jnp.float32) * ks[:, :, None, None]
+    vd = vq.astype(jnp.float32) * vs[:, :, None, None]
+    want = mha(q, kd, vd, causal=False, window=None, chunk=1, kv_len=lens)
+    got = decode_attention(q, kq, vq, kv_len=lens, interpret=True,
+                           k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # within quantization tolerance of the unquantized attention
+    ref = mha(q, k, v, causal=False, window=None, chunk=1, kv_len=lens)
+    assert float(jnp.max(jnp.abs(got - ref))) < 0.2
+
+
+@pytest.mark.parametrize("blk_b", [1, 2, 3, 8])
+def test_decode_kernel_batch_tiling(blk_b):
+    """blk_b batch blocks (incl. zero-padding B=3 -> blk_b multiples)
+    agree with the untiled kernel, with and without scales."""
+    B, H, Hkv, dh, T = 3, 4, 2, 32, 48
+    q, k, v = _qkv(jax.random.PRNGKey(4), B, H, Hkv, dh, T)
+    lens = jnp.asarray([5, 48, 20])
+    want = mha(q, k, v, causal=False, window=None, chunk=1, kv_len=lens)
+    got = decode_attention(q, k, v, kv_len=lens, interpret=True,
+                           blk_b=blk_b, blk_k=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    kq, ks = quantize_kv(k, jnp.int8)
+    vq, vs = quantize_kv(v, jnp.int8)
+    got8 = decode_attention(q, kq, vq, kv_len=lens, interpret=True,
+                            blk_b=blk_b, blk_k=16, k_scale=ks, v_scale=vs)
+    base8 = decode_attention(q, kq, vq, kv_len=lens, interpret=True,
+                             k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(got8), np.asarray(base8),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_kernel_scale_validation():
+    q, k, v = _qkv(jax.random.PRNGKey(5), 2, 4, 2, 32, 16)
+    ks = jnp.ones((2, 16), jnp.float32)
+    with pytest.raises(ValueError, match="scale"):
+        decode_attention(q, k, v, k_scale=ks, interpret=True)
+
+
+@pytest.mark.parametrize("kv,tol", [("bfloat16", 2e-2), ("int8", 0.25)])
+def test_model_decode_quantized_kv(kv, tol):
+    """Model-level: decode logits with a quantized cache stay within
+    quantization tolerance, on both attention backends."""
+    cfg = get_arch("qwen3-1.7b").reduced()
+    cfg = dataclasses.replace(cfg, kv_dtype=kv)
+    base = get_arch("qwen3-1.7b").reduced()
+    params = Mo.init(jax.random.PRNGKey(0), base)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, base.vocab)
+    for backend in ("jnp", "flash"):
+        c_q = dataclasses.replace(cfg, attn_backend=backend)
+        c_f = dataclasses.replace(base, attn_backend=backend)
+        lq, cq = Mo.prefill(params, c_q, {"tokens": tokens}, cache_len=20)
+        lf, cf = Mo.prefill(params, c_f, {"tokens": tokens}, cache_len=20)
+        tok = jnp.argmax(lf[:, -1], -1).astype(jnp.int32)
+        lq2, _ = Mo.decode_step(params, c_q, cq, tok)
+        lf2, _ = Mo.decode_step(params, c_f, cf, tok)
+        err = float(jnp.max(jnp.abs(lq2 - lf2)))
+        assert err < tol * max(1.0, float(jnp.max(jnp.abs(lf2)))), (backend,
+                                                                    err)

@@ -195,3 +195,54 @@ def test_fused_backends_preserve_dtype(backend):
     x = _rand(jax.random.PRNGKey(5), (8, 64)).astype(jnp.bfloat16)
     out = Estimator(method="vrmom", backend=backend, interpret=True).apply(x)
     assert out.dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Fused aggregation + sampling dispatch (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", sorted(COORDINATEWISE_METHODS))
+def test_apply_sample_backend_parity(method):
+    """apply_sample: the pallas fused tail and the jnp fallback return
+    the same greedy token and the same aggregate for every
+    coordinate-wise method (mean has no fused kernel — the dispatch
+    falls through to apply + argmax and must still agree)."""
+    x = _rand(jax.random.PRNGKey(7), (8, 3, 97))
+    outs = {}
+    for backend in ("pallas", "jnp"):
+        est = Estimator(method=method, backend=backend, interpret=True,
+                        beta=0.2)
+        agg, tok = est.apply_sample(x)
+        outs[backend] = (np.asarray(agg), np.asarray(tok))
+    np.testing.assert_allclose(outs["pallas"][0], outs["jnp"][0],
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(outs["pallas"][1], outs["jnp"][1])
+
+
+def test_apply_sample_topk_parity():
+    x = _rand(jax.random.PRNGKey(8), (8, 2, 120))
+    for backend in ("pallas", "jnp"):
+        est = Estimator(method="vrmom", backend=backend, interpret=True)
+        agg, topv, topi = est.apply_sample(x, top_k=4)
+        want_v, want_i = jax.lax.top_k(agg, 4)
+        np.testing.assert_array_equal(np.asarray(topi), np.asarray(want_i))
+        np.testing.assert_allclose(np.asarray(topv), np.asarray(want_v),
+                                   rtol=1e-6, atol=1e-6)
+        assert topi.dtype == jnp.int32
+
+
+def test_apply_sample_with_agg_false():
+    """with_agg=False: fused path skips the aggregate write (None);
+    the token still matches the with_agg=True dispatch."""
+    x = _rand(jax.random.PRNGKey(9), (8, 2, 64))
+    est = Estimator(method="vrmom", backend="pallas", interpret=True)
+    agg, tok = est.apply_sample(x)
+    no_agg, tok2 = est.apply_sample(x, with_agg=False)
+    assert no_agg is None
+    np.testing.assert_array_equal(np.asarray(tok), np.asarray(tok2))
+
+
+def test_apply_sample_rejects_non_stack():
+    est = Estimator(method="vrmom", interpret=True)
+    with pytest.raises(ValueError, match="m, B, V"):
+        est.apply_sample(_rand(jax.random.PRNGKey(0), (8, 64)))

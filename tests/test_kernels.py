@@ -166,3 +166,94 @@ def test_flash_attention_matches_model_mha():
     b = mha(q, k, v, causal=True, window=None, chunk=16)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------- fused decode tail
+
+from repro.kernels.vrmom import aggregate_sample_pallas
+
+
+def _stack(key, m, B, V):
+    return 4.0 * jax.random.normal(key, (m, B, V), jnp.float32) + 1.5
+
+
+@pytest.mark.parametrize("m", [4, 8])
+@pytest.mark.parametrize("method", ["median", "mom", "trimmed_mean",
+                                    "vrmom"])
+def test_fused_tail_greedy_bit_identical(m, method):
+    """One-dispatch agg+argmax == aggregate kernel + jnp argmax, bitwise."""
+    beta = 0.25 if method == "trimmed_mean" else 0.1
+    x = _stack(jax.random.PRNGKey(m), m, 3, 257)
+    agg, tok = aggregate_sample_pallas(x, method=method, beta=beta,
+                                       interpret=True)
+    want_agg = aggregate_pallas(x, method=method, beta=beta, interpret=True)
+    assert (np.asarray(agg) == np.asarray(want_agg)).all()
+    assert (np.asarray(tok)
+            == np.asarray(jnp.argmax(want_agg, axis=-1))).all()
+    assert tok.dtype == jnp.int32
+
+
+@pytest.mark.parametrize("k", [1, 5, 16])
+def test_fused_tail_topk_matches_lax(k):
+    """Fused top-k epilogue reproduces jax.lax.top_k values AND order."""
+    x = _stack(jax.random.PRNGKey(k), 8, 2, 300)
+    agg, topv, topi = aggregate_sample_pallas(x, method="vrmom", top_k=k,
+                                              interpret=True)
+    want_v, want_i = jax.lax.top_k(agg, k)
+    assert (np.asarray(topv) == np.asarray(want_v)).all()
+    assert (np.asarray(topi) == np.asarray(want_i)).all()
+
+
+def test_fused_tail_topk_tie_order():
+    """Duplicate maxima resolve to the smaller index, like lax.top_k."""
+    x = jnp.zeros((4, 1, 64), jnp.float32).at[:, 0, 10].set(7.0)
+    x = x.at[:, 0, 3].set(7.0)
+    agg, topv, topi = aggregate_sample_pallas(x, method="median", top_k=2,
+                                              interpret=True)
+    want_v, want_i = jax.lax.top_k(agg, 2)
+    assert (np.asarray(topi) == np.asarray(want_i)).all()
+    assert list(np.asarray(topi[0])) == [3, 10]
+
+
+def test_fused_tail_with_agg_false():
+    """with_agg=False skips the [B, V] HBM write, same token."""
+    x = _stack(jax.random.PRNGKey(9), 8, 4, 200)
+    agg, tok = aggregate_sample_pallas(x, method="vrmom", interpret=True)
+    none_agg, tok2 = aggregate_sample_pallas(x, method="vrmom",
+                                             interpret=True, with_agg=False)
+    assert none_agg is None
+    assert (np.asarray(tok) == np.asarray(tok2)).all()
+
+
+def test_fused_tail_multi_tile():
+    """Vocab split across tiles: running argmax carries across grid steps."""
+    x = _stack(jax.random.PRNGKey(11), 8, 2, 513)
+    a1, t1 = aggregate_sample_pallas(x, method="vrmom", tile=128,
+                                     interpret=True)
+    a2, t2 = aggregate_sample_pallas(x, method="vrmom", interpret=True)
+    assert (np.asarray(a1) == np.asarray(a2)).all()
+    assert (np.asarray(t1) == np.asarray(t2)).all()
+
+
+def test_fused_tail_byzantine_bounded():
+    """floor(alpha m) saturated rows cannot move the greedy token.
+
+    The honest stack votes coordinate 17 with a margin far above the
+    estimator's worst-case displacement under 2/8 corrupted rows, so
+    the fused token must survive the attack.
+    """
+    key = jax.random.PRNGKey(5)
+    x = _stack(key, 8, 2, 128).at[:, :, 17].add(1e3)
+    y = x.at[-2:].set(1e9)  # 2/8 Byzantine rows
+    agg, tok = aggregate_sample_pallas(y, method="vrmom", interpret=True)
+    med = ref.ref_mom(x[:-2].reshape(6, -1)).reshape(2, 128)
+    assert float(jnp.max(jnp.abs(agg - med))) < 50.0
+    assert (np.asarray(tok) == 17).all()
+
+
+def test_fused_tail_validates():
+    x = _stack(jax.random.PRNGKey(0), 4, 2, 32)
+    with pytest.raises(ValueError):
+        aggregate_sample_pallas(x[0], interpret=True)  # not [m, B, V]
+    with pytest.raises(ValueError):
+        aggregate_sample_pallas(x, top_k=33, interpret=True)  # k > V

@@ -303,6 +303,50 @@ def test_rl006_true_negative_masked_or_unpadded():
     assert ids(fs) == []
 
 
+def test_rl006_true_positive_partial_bound_kernel():
+    """The fused-tail shape: a wrapper that pads rows, then dispatches a
+    functools.partial-bound kernel with NO mask anywhere — must flag."""
+    fs = run("""
+        import functools
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def _tail(x_ref, o_ref, *, m):
+            o_ref[...] = jnp.sum(x_ref[...], axis=0)
+
+        def fused(x, m_pad):
+            x = jnp.pad(x, ((0, m_pad - x.shape[0]), (0, 0)))
+            return pl.pallas_call(functools.partial(_tail, m=x.shape[0]),
+                                  grid=(4,), out_shape=x)(x)
+        """)
+    assert ids(fs) == ["RL006"]
+
+
+def test_rl006_true_negative_mask_in_module_helper():
+    """The mask may live in a same-module helper the kernel calls (the
+    vrmom kernels share ``_agg_block``) — the rule follows plain-name
+    calls to module-level defs before flagging."""
+    fs = run("""
+        import functools
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def _shared_block(x, n):
+            i = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+            return jnp.where(i < n, x, 0.0)
+
+        def _kern(x_ref, o_ref, *, n):
+            o_ref[...] = _shared_block(x_ref[...], n)
+
+        def padded(x, n):
+            x = jnp.pad(x, ((0, 3), (0, 0)))
+            return pl.pallas_call(functools.partial(_kern, n=n),
+                                  grid=(4,), out_shape=x)(x)
+        """)
+    assert ids(fs) == []
+
+
 # ---------------------------------------------------------------------------
 # RL007 — wall-clock-outside-obs
 # ---------------------------------------------------------------------------
