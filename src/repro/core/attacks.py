@@ -19,6 +19,7 @@ __all__ = [
     "byzantine_mask",
     "gaussian",
     "omniscient",
+    "alie",
     "bitflip",
     "signflip",
     "zero",
@@ -58,6 +59,35 @@ def omniscient(key, v, mask, scale: float = 1e10):
     return _apply(mask, v, -scale * jnp.broadcast_to(honest_mean, v.shape))
 
 
+def alie(key, v, mask, z=None):
+    """ALIE ("a little is enough", Baruch et al. 2019): Byzantine rows
+    sit at ``honest_mean + z * honest_std`` per coordinate — inside the
+    honest point cloud, so naive trimming cannot separate them, yet
+    coordinated, so they drag every mean-like aggregate one-sided.
+
+    ``z`` defaults to the paper's omniscient choice
+    ``Phi^{-1}((n - m - s) / (n - m))`` with ``s = floor(n/2 + 1) - m``
+    — the largest offset at which the corrupt rows still out-vote
+    enough honest tail mass to capture the median. Honest statistics
+    are computed over the unmasked rows only (the adversary observes
+    honest messages, not its own payloads).
+    """
+    f32 = v.astype(jnp.float32)
+    keep = (~mask).reshape((-1,) + (1,) * (v.ndim - 1)).astype(jnp.float32)
+    n_h = jnp.maximum(jnp.sum(keep, axis=0), 1.0)
+    mean = jnp.sum(f32 * keep, axis=0, keepdims=True) / n_h
+    var = jnp.sum((f32 - mean) ** 2 * keep, axis=0, keepdims=True) / n_h
+    std = jnp.sqrt(jnp.maximum(var, 0.0))
+    if z is None:
+        n = jnp.float32(v.shape[0])
+        m = jnp.sum(mask.astype(jnp.float32))
+        s = jnp.floor(n / 2.0 + 1.0) - m
+        q = jnp.clip((n - m - s) / jnp.maximum(n - m, 1.0), 0.5, 1.0 - 1e-6)
+        z = jax.scipy.special.ndtri(q)
+    corrupt = (mean + z * std).astype(v.dtype)
+    return _apply(mask, v, jnp.broadcast_to(corrupt, v.shape))
+
+
 def bitflip(key, v, mask, n_dims: int = 5):
     """Bit-flip attack: flip the sign of the first ``n_dims`` coordinates."""
     if v.ndim == 1:
@@ -88,6 +118,7 @@ REGISTRY = {
     "none": lambda key, v, mask: v,
     "gaussian": gaussian,
     "omniscient": omniscient,
+    "alie": alie,
     "bitflip": bitflip,
     "signflip": signflip,
     "zero": zero,

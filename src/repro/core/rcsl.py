@@ -215,6 +215,9 @@ def rcsl(
     tol: Optional[float] = 1e-4,
     theta0: Optional[jnp.ndarray] = None,
     labelflip: bool = False,
+    reduce_backend: str = "direct",
+    consensus=None,
+    fault_plan=None,
     **agg_kwargs,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Run Algorithm 1. Returns (theta_T, theta_trajectory [rounds+1, p]).
@@ -225,11 +228,36 @@ def rcsl(
     ``tol``: adaptive stopping |th_t - th_{t-1}|^2/|th_{t-1}|^2 <= tol;
     after triggering, the trajectory repeats the converged iterate (the
     computation stays fixed-shape for jit).
+
+    ``reduce_backend="consensus"`` replaces the master's one-shot
+    aggregation (step 3) with the peer-to-peer consensus iteration
+    (DESIGN.md §13): every machine f-trims and averages what it hears
+    until eps-agreement, under an optional ``dist.faults.FaultPlan``
+    (dropout/crashes/stragglers) — Byzantine rows keep re-broadcasting
+    their corrupted payload every round. The master-scale VRMOM
+    special case does not apply there (consensus rounds run the §7
+    Estimator with its own mad scale); ``consensus`` is a
+    ``dist.consensus.ConsensusConfig`` (default derives ``f`` from
+    ``alpha``).
     """
     X, Y = shards.X, shards.Y
     m1 = X.shape[0]
     mask = attacks.byzantine_mask(m1, alpha)
     attack_fn = attacks.get(attack)
+
+    if reduce_backend not in ("direct", "consensus"):
+        raise ValueError(f"unknown reduce_backend {reduce_backend!r}; "
+                         "known: ('direct', 'consensus')")
+    if reduce_backend == "consensus":
+        from ..dist.consensus import ConsensusConfig, consensus_aggregate
+
+        est_c = Estimator.coerce(aggregator, backend="jnp", **agg_kwargs)
+        if isinstance(aggregator, str) and est_c.method == "vrmom":
+            est_c = est_c._replace(K=K)
+        if consensus is None:
+            n_byz = int(alpha * (m1 - 1))
+            consensus = ConsensusConfig(f=max(n_byz, 1) if m1 > 5 else 0)
+        consensus.validate(m1)
 
     if theta0 is None:
         theta0 = problem.init_theta(X[0], Y[0])
@@ -246,11 +274,21 @@ def rcsl(
             grads = jnp.where(mask[:, None], grads_b, grads_h)
         else:
             grads = attack_fn(key_t, grads_h, mask)
-        psg = problem.per_sample_grads(theta, X[0], Y[0]) if scale == "master" else None
-        gbar = aggregate_gradients(
-            grads, aggregator=aggregator, K=K, scale=scale,
-            per_sample_grads_master=psg, **agg_kwargs,
-        )
+        if reduce_backend == "consensus":
+            # fold_in (not split) keeps the attack stream bit-identical
+            # to the direct backend for the same outer key.
+            gbar, _caux = consensus_aggregate(
+                grads.astype(jnp.float32), est_c, config=consensus,
+                plan=fault_plan, key=jax.random.fold_in(key_t, 7),
+                pin_mask=mask)
+            gbar = gbar.astype(grads.dtype)
+        else:
+            psg = (problem.per_sample_grads(theta, X[0], Y[0])
+                   if scale == "master" else None)
+            gbar = aggregate_gradients(
+                grads, aggregator=aggregator, K=K, scale=scale,
+                per_sample_grads_master=psg, **agg_kwargs,
+            )
         g0 = grads[0]
         theta_new = problem.master_solve(theta, X[0], Y[0], g0 - gbar)
         if tol is not None:

@@ -1,6 +1,6 @@
 """Distributed substrate: mesh context, sharding rules, robust reduction.
 
-Three modules (DESIGN.md §3):
+Five modules (DESIGN.md §3, §13):
 
 * ``ctx`` — ambient mesh context (``mesh_context``/``constrain``/
   ``axis_size``) that model layers query lazily, plus the
@@ -12,9 +12,17 @@ Three modules (DESIGN.md §3):
   shard_map all_to_all Robust-Reduce-Scatter (``aggregate_stacked_rrs``),
   its jit-native twin (``aggregate_stacked_auto``), and the in-backward
   path (``robust_backward`` + ``robust_dot``).
+* ``consensus`` — the coordinator-free alternative (DESIGN.md §13):
+  iterative trimmed-mean/midpoint approximate consensus on the same
+  stacked wire (``aggregate_stacked_consensus`` + the mesh-free
+  ``consensus_aggregate`` emulation), tolerating ``f`` Byzantine peers
+  with ``n > 5f`` plus message loss.
+* ``faults`` — jit-pure fault injection (``FaultPlan``): per-round
+  message dropout, permanent crashes, stale stragglers — composable
+  with the ``core/attacks`` Byzantine payloads.
 """
 from __future__ import annotations
 
-from . import ctx, robust_reduce, sharding  # noqa: F401
+from . import consensus, ctx, faults, robust_reduce, sharding  # noqa: F401
 
-__all__ = ["ctx", "robust_reduce", "sharding"]
+__all__ = ["consensus", "ctx", "faults", "robust_reduce", "sharding"]

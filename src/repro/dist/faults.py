@@ -1,0 +1,124 @@
+"""jit-pure fault injection for the consensus backend (DESIGN.md §13).
+
+A :class:`FaultPlan` is a hashable static spec — like ``Estimator``
+(§7) it keys the jit trace cache, so two plans with different fault
+structure compile separately while the *randomness* (which message is
+dropped this round) stays inside the trace, drawn from a PRNG key
+folded with the round index. Everything here returns fixed-shape
+arrays, composing with ``vmap``/``jit``/``shard_map``.
+
+Worker-index convention (``n`` = total consensus peers):
+
+* **crashed** workers occupy the *first* ``n_crashed`` indices — they
+  stop sending permanently from round ``crash_round`` on;
+* **stragglers** occupy the next ``n_stragglers`` indices — they keep
+  sending, but serve the value they held ``stale_rounds`` rounds ago;
+* **Byzantine** workers (``core.attacks.byzantine_mask``) occupy the
+  *last* rows.
+
+The three populations are therefore disjoint by construction as long
+as ``n_crashed + n_stragglers + n_byzantine <= n``, which lets a test
+compose a ``FaultPlan`` with any registered attack payload without the
+fault model accidentally silencing the adversary (a crashed Byzantine
+worker is just a crashed worker).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["FaultPlan"]
+
+
+class FaultPlan(NamedTuple):
+    """Static description of the failures injected into a consensus run.
+
+    ``dropout``      — iid per-round, per-(receiver, sender) message
+                       loss probability (self-delivery never drops).
+    ``n_crashed``    — workers that crash permanently...
+    ``crash_round``  — ...at the start of this round (0 = from the
+                       first exchange; fail-stop, not fail-recover).
+    ``n_stragglers`` — workers whose sends are stale:
+    ``stale_rounds`` — they serve the value held ``k`` rounds earlier
+                       (their round-0 value for the first ``k`` rounds).
+    """
+    dropout: float = 0.0
+    n_crashed: int = 0
+    crash_round: int = 0
+    n_stragglers: int = 0
+    stale_rounds: int = 1
+
+    # -- static structure ---------------------------------------------------
+    @property
+    def trivial(self) -> bool:
+        """True when the plan injects nothing — the fault-free fast
+        path (pure ``Estimator`` rounds, no masking) is exact."""
+        return (self.dropout == 0.0 and self.n_crashed == 0
+                and self.n_stragglers == 0)
+
+    def validate(self, n: int) -> "FaultPlan":
+        if not 0.0 <= float(self.dropout) < 1.0:
+            raise ValueError(f"dropout must be in [0, 1), got {self.dropout}")
+        if self.n_crashed < 0 or self.n_stragglers < 0:
+            raise ValueError("n_crashed / n_stragglers must be >= 0")
+        if self.n_crashed + self.n_stragglers > n:
+            raise ValueError(
+                f"FaultPlan places {self.n_crashed} crashed + "
+                f"{self.n_stragglers} straggler workers on only {n} peers")
+        if self.n_stragglers and self.stale_rounds < 1:
+            raise ValueError("stale_rounds must be >= 1 when stragglers > 0")
+        return self
+
+    # -- static masks (host ints in, jnp arrays out) ------------------------
+    def crashed_mask(self, n: int) -> jnp.ndarray:
+        """[n] bool — workers that *will* crash (first ``n_crashed``)."""
+        return jnp.arange(n) < self.n_crashed
+
+    def straggler_mask(self, n: int) -> jnp.ndarray:
+        """[n] bool — stale senders (indices after the crashed block)."""
+        idx = jnp.arange(n)
+        return ((idx >= self.n_crashed)
+                & (idx < self.n_crashed + self.n_stragglers))
+
+    # -- per-round traced state --------------------------------------------
+    def crashed_at(self, n: int, p) -> jnp.ndarray:
+        """[n] bool — workers already crashed in round ``p`` (traced)."""
+        return self.crashed_mask(n) & (jnp.asarray(p) >= self.crash_round)
+
+    def recv_matrix(self, key, n: int, p) -> jnp.ndarray:
+        """[n, n] bool — ``recv[i, j]``: receiver ``i`` got sender
+        ``j``'s round-``p`` message.
+
+        The diagonal is always True (a worker always has its own
+        value); columns of crashed senders go False once ``p`` reaches
+        ``crash_round``; every other edge drops iid with probability
+        ``dropout`` under ``fold_in(key, p)``. Deterministic in
+        ``(key, p)``, so the emulation and the shard_map backend — which
+        evaluate it redundantly on every shard — see the same matrix.
+        """
+        eye = jnp.eye(n, dtype=bool)
+        recv = jnp.ones((n, n), dtype=bool)
+        if self.dropout > 0.0:
+            up = jax.random.uniform(jax.random.fold_in(key, p), (n, n))
+            recv = eye | (up >= self.dropout)
+        if self.n_crashed:
+            recv = recv & ~self.crashed_at(n, p)[None, :]
+        return recv
+
+
+# FaultPlan is a static jit argument: reject unhashable fields at
+# construction, same guard (and same caveat about _replace) as the §7
+# Estimator spec.
+_orig_new = FaultPlan.__new__
+
+
+def _checked_new(cls, *args, **kwargs):
+    from ..lint.hashguard import check_hashable_fields
+    plan = _orig_new(cls, *args, **kwargs)
+    check_hashable_fields(plan)
+    return plan
+
+
+FaultPlan.__new__ = _checked_new

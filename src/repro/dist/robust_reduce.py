@@ -173,10 +173,45 @@ def aggregate_stacked_rrs(grads, mesh, worker_axes,
 
 
 def aggregate_stacked_auto(grads, est: EstimatorLike = "vrmom", *,
-                           with_diag: bool = False):
+                           with_diag: bool = False,
+                           reduce_backend: str = "direct",
+                           consensus=None, plan=None, key=None,
+                           pin_mask=None):
     """jit-native equivalent of ``aggregate_stacked_rrs``: the same
-    coordinate-wise estimator per leaf, sharding left to GSPMD."""
+    coordinate-wise estimator per leaf, sharding left to GSPMD.
+
+    ``reduce_backend="consensus"`` swaps the one-shot estimator for the
+    mesh-free peer-to-peer consensus emulation (DESIGN.md §13): all
+    leaves are raveled onto one ``[W, C]`` wire, iterated to
+    eps-agreement under the optional ``FaultPlan``, and split back.
+    The consensus path returns ``(pytree, ConsensusAux)`` (diag, when
+    requested, appended last) — the direct path's signature is
+    unchanged.
+    """
     est = _wire_estimator(est)
+    if reduce_backend not in ("direct", "consensus"):
+        raise ValueError(f"unknown reduce_backend {reduce_backend!r}; "
+                         "known: ('direct', 'consensus')")
+    if reduce_backend == "consensus":
+        from .consensus import consensus_aggregate
+
+        leaves, treedef = jax.tree.flatten(grads)
+        W = leaves[0].shape[0]
+        wire = jnp.concatenate(
+            [l.reshape(W, -1).astype(jnp.float32) for l in leaves], axis=1)
+        agg, aux = consensus_aggregate(wire, est, config=consensus,
+                                       plan=plan, key=key,
+                                       pin_mask=pin_mask)
+        outs, off = [], 0
+        for l in leaves:
+            size = l.size // W
+            outs.append(agg[off:off + size]
+                        .reshape(l.shape[1:]).astype(l.dtype))
+            off += size
+        out = jax.tree.unflatten(treedef, outs)
+        if with_diag:
+            return out, aux, _with_tree_diag(grads, out)[1]
+        return out, aux
 
     def one(g):
         flat = g.reshape(g.shape[0], -1).astype(jnp.float32)
@@ -215,16 +250,30 @@ def aggregate_symmetric_stacked(mats, est: EstimatorLike = "vrmom"):
 
 def aggregate(grads, mesh, worker_axes, *, mode: str = "stacked-rrs",
               est: EstimatorLike = "vrmom", specs=None,
-              with_diag: bool = False):
+              with_diag: bool = False, consensus=None, plan=None,
+              key=None, pin_mask=None):
     """Mode dispatcher used by ``train/step.py``.
 
     ``stacked-rrs`` — shard_map RRS; ``stacked-auto`` — jit-native;
+    ``stacked-consensus`` — peer-to-peer approximate consensus on the
+    same wire (DESIGN.md §13; returns ``(aggregate, ConsensusAux)``,
+    diag appended last when requested, and takes the consensus-only
+    ``consensus``/``plan``/``key``/``pin_mask`` arguments);
     ``mean`` — plain mean over the worker dim (the non-robust baseline).
     ``with_diag`` returns ``(aggregate, obs.diag.AggDiagnostics)`` for
     every mode (the mean baseline's suspicion scores are still defined —
     deviation from the mean — which is what makes its non-robustness
     visible in the telemetry).
     """
+    if mode == "stacked-consensus":
+        from .consensus import aggregate_stacked_consensus
+
+        out, aux = aggregate_stacked_consensus(
+            grads, mesh, worker_axes, est, config=consensus, plan=plan,
+            key=key, pin_mask=pin_mask, specs=specs)
+        if with_diag:
+            return out, aux, _with_tree_diag(grads, out)[1]
+        return out, aux
     if mode == "stacked-rrs":
         return aggregate_stacked_rrs(grads, mesh, worker_axes, est,
                                      specs=specs, with_diag=with_diag)

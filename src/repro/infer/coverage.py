@@ -78,6 +78,9 @@ def coverage_run(
     batch_size: int = 16,
     mesh=None,
     rep_axis: str = "data",
+    reduce_backend: str = "direct",
+    consensus=None,
+    fault_plan=None,
 ) -> CoverageCell:
     """Run one fully-compiled coverage cell; see module docstring.
 
@@ -85,6 +88,13 @@ def coverage_run(
     replication axis is shard_map-sharded over it — ``reps`` must be
     divisible by the axis size. Without a mesh the same program runs on
     one device.
+
+    ``reduce_backend="consensus"`` runs every RCSL round's aggregation
+    through the peer-to-peer consensus emulation (DESIGN.md §13) with
+    the given ``dist.consensus.ConsensusConfig`` / ``dist.faults.
+    FaultPlan`` — the statistical cell under the decentralized wire,
+    optionally with message loss and crashes injected inside each
+    replication.
     """
     theta_star = R.paper_theta_star(p)
     problem = (R.LinearRegressionProblem() if model == "linear"
@@ -97,7 +107,9 @@ def coverage_run(
                                theta_star=theta_star, model=model, mu_x=mu_x)
         theta_hat, _ = R.rcsl(problem, shards, kr, alpha=alpha, attack=attack,
                               aggregator=estimator, K=K, rounds=rounds,
-                              labelflip=labelflip)
+                              labelflip=labelflip,
+                              reduce_backend=reduce_backend,
+                              consensus=consensus, fault_plan=fault_plan)
         shards_rep, stat_attack = shards, attack
         if labelflip:
             # Label-flip Byzantine machines report *honest* statistics

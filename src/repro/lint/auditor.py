@@ -1,4 +1,4 @@
-"""Layer-2 abstract trace auditor (RL201–RL209, DESIGN.md §10).
+"""Layer-2 abstract trace auditor (RL201–RL210, DESIGN.md §10).
 
 Drives the public entry points through ``jax.eval_shape`` /
 ``jax.make_jaxpr`` — no array is ever materialized, no kernel executed —
@@ -14,8 +14,10 @@ Entry points audited (ISSUE acceptance: ≥ 6):
 4. ``train.step.make_train_step``                     (RL206, RL205)
 5. ``serve.engine.ServeEngine`` prefill + decode loop (RL207, RL204)
 6. ``infer.sandwich.infer`` (sandwich CI path)        (RL208)
-7. every static spec: Estimator / ArchConfig /
-   RobustDecodeConfig / Sampling                      (RL209)
+7. ``dist.consensus.aggregate_stacked_consensus``     (RL210)
+8. every static spec: Estimator / ConsensusConfig /
+   FaultPlan / ArchConfig / RobustDecodeConfig /
+   Sampling                                           (RL209)
 
 The recompile guard (RL209) is the one check that *runs* a jitted
 function — a scalar-add wrapper with the spec as its static argument,
@@ -38,7 +40,8 @@ import jax.numpy as jnp
 
 from .findings import AuditResult
 
-__all__ = ["run_audit", "recompile_stability", "divisibility_audit"]
+__all__ = ["run_audit", "recompile_stability", "divisibility_audit",
+           "consensus_validity_audit"]
 
 
 def _sds(shape, dtype):
@@ -352,6 +355,55 @@ def _check_sandwich() -> List[AuditResult]:
 
 
 # ---------------------------------------------------------------------------
+# RL210 — consensus wire shapes + n > 5f refusal
+# ---------------------------------------------------------------------------
+
+def _check_consensus() -> List[AuditResult]:
+    def body():
+        from ..core.estimator import Estimator
+        from ..dist.consensus import (ConsensusAux, ConsensusConfig,
+                                      aggregate_stacked_consensus)
+        from ..dist.faults import FaultPlan
+
+        mesh, nw = _mesh1d()
+        est = Estimator(method="vrmom", K=3)
+        f_ok = max((nw - 1) // 5, 0)
+        grads = {"w": _sds((nw, 4, 6), jnp.bfloat16),
+                 "b": _sds((nw, 5), jnp.float32)}
+        for plan in (None, FaultPlan(dropout=0.25, n_crashed=1,
+                                     crash_round=1)):
+            out, aux = jax.eval_shape(
+                lambda g: aggregate_stacked_consensus(
+                    g, mesh, ("data",), est,
+                    config=ConsensusConfig(f=f_ok, max_rounds=4),
+                    plan=plan, key=jax.random.PRNGKey(0)),
+                grads)
+            assert out["w"].shape == (4, 6), out["w"].shape
+            assert out["b"].shape == (5,), out["b"].shape
+            assert out["w"].dtype == jnp.bfloat16, (
+                f"bf16 leaf upcast to {out['w'].dtype} through the "
+                f"round loop")
+            assert out["b"].dtype == jnp.float32, out["b"].dtype
+            assert isinstance(aux, ConsensusAux), type(aux)
+            for name, leaf in zip(aux._fields, aux):
+                assert leaf.shape == (), (
+                    f"aux field {name} is not a scalar: {leaf.shape}")
+        _expect_raises(
+            lambda: jax.eval_shape(
+                lambda g: aggregate_stacked_consensus(
+                    g, mesh, ("data",), est,
+                    config=ConsensusConfig(f=nw)),
+                grads),
+            ValueError, "n > 5f",
+            f"consensus with f={nw} on {nw} peers")
+        return (f"[{nw}, ...] pytree -> worker dim removed, dtypes "
+                f"preserved through the static round loop (fault-free "
+                f"and faulty plans); f={nw} refused at trace time")
+
+    return [_result("RL210", "dist.aggregate_stacked_consensus", body)]
+
+
+# ---------------------------------------------------------------------------
 # RL209 — recompile stability (public helper + the spec sweep)
 # ---------------------------------------------------------------------------
 
@@ -397,9 +449,16 @@ def _check_recompile() -> List[AuditResult]:
     from ..serve.engine import Sampling
     from ..serve.robust import RobustDecodeConfig
 
+    from ..dist.consensus import ConsensusConfig
+    from ..dist.faults import FaultPlan
+
     specs = [
         ("core.Estimator",
          lambda: Estimator(method="vrmom", K=4, backend="pallas")),
+        ("dist.ConsensusConfig",
+         lambda: ConsensusConfig(f=1, eps=1e-3, trim="midpoint")),
+        ("dist.FaultPlan",
+         lambda: FaultPlan(dropout=0.1, n_crashed=1, crash_round=2)),
         ("configs.ArchConfig",
          lambda: ArchConfig(name="audit", family="dense", n_layers=1,
                             d_model=32, n_heads=2, n_kv_heads=1,
@@ -430,6 +489,25 @@ def divisibility_audit(name: str, batch: int, n_workers: int) -> AuditResult:
     return _result("RL205", name, body)
 
 
+def consensus_validity_audit(name: str, n: int, f: int) -> AuditResult:
+    """Flag a consensus deployment outside the ``n > 5f`` validity
+    region — the static precondition RL210 verifies the runtime
+    refusal enforces. Mesh-free (pure arithmetic on the config), so
+    configs can be audited before any device exists."""
+    def body():
+        from ..dist.consensus import ConsensusConfig
+
+        if n <= 5 * f:
+            raise AssertionError(
+                f"n={n} peers with f={f} Byzantine faults violates "
+                f"n > 5f: approximate consensus loses both validity "
+                f"and convergence (need n >= {5 * f + 1})")
+        ConsensusConfig(f=f).validate(n)
+        return f"n={n}, f={f} satisfies n > 5f (margin {n - 5 * f})"
+
+    return _result("RL210", name, body)
+
+
 # ---------------------------------------------------------------------------
 # driver
 # ---------------------------------------------------------------------------
@@ -445,5 +523,6 @@ def run_audit() -> List[AuditResult]:
     results += _check_train_step()
     results += _check_serve_engine()
     results += _check_sandwich()
+    results += _check_consensus()
     results += _check_recompile()
     return results

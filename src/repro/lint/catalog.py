@@ -135,6 +135,14 @@ AUDIT_CHECKS = (
         "RobustDecodeConfig, Sampling) traces exactly once: hash/eq "
         "drift in a spec would silently retrace per call.",
         "DESIGN §7 (PR 3); guard this PR"),
+    RuleInfo(
+        "RL210", "consensus-wire",
+        "aggregate_stacked_consensus preserves every leaf's shape and "
+        "dtype through the static round loop (fault-free and faulty "
+        "plans, scalar aux), and refuses n <= 5f configurations at "
+        "trace time — outside that region approximate consensus loses "
+        "validity.",
+        "DESIGN §13 (PR 9)"),
 )
 
 ALL_IDS = tuple(r.id for r in AST_RULES + AUDIT_CHECKS)

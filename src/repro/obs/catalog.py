@@ -23,6 +23,7 @@ __all__ = [
     "METRICS",
     "LATENCY_EDGES_S",
     "FRACTION_EDGES",
+    "ROUND_EDGES",
     "default_edges",
     "info",
 ]
@@ -48,6 +49,12 @@ LATENCY_EDGES_S = _log_edges(
 # Replica-disagreement rates are multiples of 1/m; 1/16 steps resolve
 # every realizable value up to m=16 replicas exactly.
 FRACTION_EDGES = tuple(round(i / 16.0, 6) for i in range(17))
+
+# Consensus round counts are small integers bounded by the static
+# p_end (tens of rounds at eps=1e-4): exact buckets through 8, then
+# ~1.4x-spaced up to the doubled-dropout regime.
+ROUND_EDGES = (1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0, 12.0, 16.0, 24.0,
+               32.0, 48.0, 64.0)
 
 
 class MetricInfo(NamedTuple):
@@ -99,6 +106,17 @@ METRICS = (
                "Mean per-worker gradient L2 norm before aggregation."),
     MetricInfo("agg.grad_norm_post", "gauge", "l2",
                "L2 norm of the robustly aggregated gradient."),
+    # -- decentralized consensus backend (DESIGN.md §13) --------------------
+    MetricInfo("consensus.rounds", "histogram", "rounds",
+               "Rounds until the honest-alive spread first reached eps "
+               "(the static bound p_end when it never did).",
+               ROUND_EDGES),
+    MetricInfo("dist.messages_dropped", "counter", "messages",
+               "Peer messages between live workers lost to injected "
+               "dropout across all consensus rounds."),
+    MetricInfo("dist.quorum", "gauge", "fraction",
+               "Fraction of (round, live receiver) slots that met the "
+               "n-f quorum; 0 means every round stalled (quorum lost)."),
     # -- training loop ------------------------------------------------------
     MetricInfo("train.step_s", "histogram", "s",
                "Wall time per training step (post-compile).",

@@ -12,8 +12,9 @@ Two helpers for the two sides of the jit boundary:
 
 The repo's hot paths are pre-annotated with the DESIGN.md §11 span
 names: ``rrs.all_to_all`` (the robust-reduce wire), ``kernels.aggregate``
-(the fused Pallas aggregation family), ``kernels.decode_attention``, and
-``serve.decode_scan`` (the engine's fused decode loop).
+(the fused Pallas aggregation family), ``kernels.decode_attention``,
+``serve.decode_scan`` (the engine's fused decode loop), and
+``consensus.round_loop`` (the §13 peer-to-peer round iteration).
 """
 from __future__ import annotations
 

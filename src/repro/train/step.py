@@ -51,6 +51,9 @@ def make_train_step(
     global_batch: Optional[int] = None,
     microbatch: Optional[int] = None,
     with_diag: bool = False,
+    reduce_backend: str = "rrs",
+    consensus=None,
+    fault_plan=None,
 ) -> TrainSetup:
     """``estimator``: a ``core.estimator.Estimator`` (or method name) —
     the single aggregation spec threaded to every robust-reduction mode.
@@ -60,7 +63,16 @@ def make_train_step(
     ``with_diag``: the step additionally returns an
     ``obs.diag.AggDiagnostics`` aux (per-worker suspicion scores,
     alpha-hat, pre/post norms) — static-shape arrays riding the same jit,
-    so enabling it changes the step signature but adds no host sync."""
+    so enabling it changes the step signature but adds no host sync.
+    ``reduce_backend``: ``"rrs"`` keeps the coordinator-style modes as
+    selected by ``mode``; ``"consensus"`` reroutes the stacked wire
+    through peer-to-peer approximate consensus (DESIGN.md §13), with
+    ``consensus`` (a ``dist.consensus.ConsensusConfig``; default derives
+    ``f`` from ``byzantine_frac``) and ``fault_plan`` (a
+    ``dist.faults.FaultPlan`` of injected dropout/crashes/stragglers).
+    In consensus mode the step always returns a
+    ``dist.consensus.ConsensusAux`` after the loss — the step signature
+    becomes ``(params, opt, loss, caux[, diag])``."""
     est = Estimator.coerce(estimator)
     if with_diag and mode == "inloop":
         raise ValueError(
@@ -73,6 +85,24 @@ def make_train_step(
         n_workers *= mesh.shape[a]
     batch_axes = worker_axes
     optimizer = optimizer or O.get(cfg.optimizer, lr=lr)
+
+    if reduce_backend not in ("rrs", "consensus"):
+        raise ValueError(f"unknown reduce_backend {reduce_backend!r}; "
+                         "known: ('rrs', 'consensus')")
+    if reduce_backend == "consensus":
+        from ..dist.consensus import ConsensusConfig
+
+        if mode == "inloop":
+            raise ValueError(
+                "reduce_backend='consensus' needs the materialized "
+                "stacked wire; inloop (IB-RRS) aggregates inside the "
+                "backward pass. Use a stacked mode.")
+        mode = "stacked-consensus"
+        if consensus is None:
+            n_byz_hint = int(byzantine_frac * (n_workers - 1))
+            consensus = ConsensusConfig(f=max(n_byz_hint, 1))
+        if n_workers > 1:
+            consensus.validate(n_workers)  # fail at build, not at trace
 
     params_shapes = M.abstract_init(cfg)
     params_specs = S.param_specs(params_shapes, mesh)
@@ -195,23 +225,41 @@ def make_train_step(
                   params_specs, worker_axes, mesh, shapes=params_shapes)
               grads = jax.lax.with_sharding_constraint(
                   grads, S.to_named(mesh, stacked_specs))
+              if mode == "stacked-consensus":
+                  key, k_cons = jax.random.split(key)
               if n_byz:
                   grads = jax.tree.map(
                       lambda g: attack_fn(key, g, mask), grads)
-              agg = RR.aggregate(grads, mesh, worker_axes, mode=mode,
-                                 est=est, specs=stacked_specs,
-                                 with_diag=with_diag)
-          diag = None
-          if with_diag:
+              if mode == "stacked-consensus":
+                  agg = RR.aggregate(grads, mesh, worker_axes, mode=mode,
+                                     est=est, specs=stacked_specs,
+                                     with_diag=with_diag,
+                                     consensus=consensus, plan=fault_plan,
+                                     key=k_cons,
+                                     pin_mask=mask if n_byz else None)
+              else:
+                  agg = RR.aggregate(grads, mesh, worker_axes, mode=mode,
+                                     est=est, specs=stacked_specs,
+                                     with_diag=with_diag)
+          diag = caux = None
+          if mode == "stacked-consensus":
+              if with_diag:
+                  agg, caux, diag = agg
+              else:
+                  agg, caux = agg
+          elif with_diag:
               agg, diag = agg
           agg = jax.lax.with_sharding_constraint(
               agg, S.to_named(mesh, params_specs))
           new_params, new_opt = optimizer.update(agg, opt_state, params)
           new_params = jax.lax.with_sharding_constraint(
               new_params, S.to_named(mesh, params_specs))
+          out = (new_params, new_opt, loss)
+          if caux is not None:
+              out = out + (caux,)
           if with_diag:
-              return new_params, new_opt, loss, diag
-          return new_params, new_opt, loss
+              out = out + (diag,)
+          return out
 
     return TrainSetup(
         step_fn=train_step,

@@ -1,0 +1,105 @@
+"""Registry-wide property tests for the Byzantine attack zoo.
+
+Every attack in ``core.attacks.REGISTRY`` must behave as a *message
+corruption*: same stack shape and dtype out, the trusted master (row 0)
+untouched under the standard ``byzantine_mask``, and a strict no-op
+when no row is marked Byzantine. A new attack that breaks any of these
+silently corrupts honest rows — which would invalidate every robustness
+claim downstream — so the properties are asserted over the whole
+registry, not per attack.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attacks as A
+
+DTYPES = (jnp.float32, jnp.bfloat16)
+
+
+def _stack(dtype, key=0):
+    return jax.random.normal(jax.random.PRNGKey(key), (9, 33)).astype(dtype)
+
+
+@pytest.mark.parametrize("name", sorted(A.REGISTRY))
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+def test_attack_preserves_shape_and_dtype(name, dtype):
+    v = _stack(dtype)
+    mask = A.byzantine_mask(v.shape[0], 0.25)
+    out = A.REGISTRY[name](jax.random.PRNGKey(1), v, mask)
+    assert out.shape == v.shape, (name, out.shape)
+    assert out.dtype == v.dtype, (name, out.dtype)
+    assert bool(jnp.all(jnp.isfinite(out.astype(jnp.float32)))), name
+
+
+@pytest.mark.parametrize("name", sorted(A.REGISTRY))
+def test_attack_never_corrupts_master_row(name):
+    v = _stack(jnp.float32)
+    for alpha in (0.1, 0.25, 0.49):
+        mask = A.byzantine_mask(v.shape[0], alpha)
+        assert not bool(mask[0]), "byzantine_mask marked the master"
+        out = A.REGISTRY[name](jax.random.PRNGKey(2), v, mask)
+        np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(v[0]),
+                                      err_msg=f"{name} corrupted row 0")
+
+
+@pytest.mark.parametrize("name", sorted(A.REGISTRY))
+def test_attack_noop_under_all_false_mask(name):
+    v = _stack(jnp.float32)
+    out = A.REGISTRY[name](jax.random.PRNGKey(3),
+                           v, jnp.zeros(v.shape[0], bool))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(v),
+                                  err_msg=f"{name} is not a no-op")
+
+
+def test_attack_jit_and_vmap_compose():
+    """Attacks are pure (key, v, mask) functions — they must survive a
+    jit and a leading vmap unchanged (the train step vmaps per-leaf)."""
+    v = _stack(jnp.float32)
+    mask = A.byzantine_mask(v.shape[0], 0.25)
+    for name, fn in sorted(A.REGISTRY.items()):
+        eager = fn(jax.random.PRNGKey(4), v, mask)
+        jitted = jax.jit(fn)(jax.random.PRNGKey(4), v, mask)
+        np.testing.assert_allclose(np.asarray(eager), np.asarray(jitted),
+                                   rtol=1e-6, atol=1e-6, err_msg=name)
+
+
+def test_alie_sits_inside_honest_spread():
+    """ALIE's whole point: corrupt rows land within a z-score of the
+    honest cloud (evading naive trimming), unlike ``omniscient`` whose
+    payload is 1e10x the honest mean."""
+    v = _stack(jnp.float32, key=7)
+    mask = A.byzantine_mask(v.shape[0], 0.25)
+    out = A.alie(jax.random.PRNGKey(5), v, mask)
+    h = np.asarray(v)[~np.asarray(mask)]
+    z = (np.asarray(out)[-1] - h.mean(0)) / h.std(0)
+    # one shared z per coordinate, and a modest one
+    assert np.allclose(z, z[0], atol=1e-4), "z varies across coordinates"
+    assert 0.0 < z[0] < 3.0, z[0]
+    # the corrupt rows are all identical (coordinated attack)
+    np.testing.assert_array_equal(np.asarray(out)[-1], np.asarray(out)[-2])
+
+
+def test_alie_explicit_z_override():
+    v = _stack(jnp.float32)
+    mask = A.byzantine_mask(v.shape[0], 0.25)
+    out = A.alie(jax.random.PRNGKey(5), v, mask, z=1.5)
+    h = np.asarray(v)[~np.asarray(mask)]
+    z = (np.asarray(out)[-1] - h.mean(0)) / h.std(0)
+    assert np.allclose(z, 1.5, atol=1e-3), z
+
+
+def test_alie_is_stealthy_where_omniscient_is_not():
+    """ALIE payloads stay inside the honest 3-sigma envelope (that is
+    the attack: evade distance-based filtering); omniscient payloads
+    leave it by ~10 orders of magnitude."""
+    key = jax.random.PRNGKey(11)
+    v = jax.random.normal(key, (9, 257))
+    mask = A.byzantine_mask(9, 0.25)
+    h = np.asarray(v)[~np.asarray(mask)]
+    lo, hi = h.mean(0) - 3 * h.std(0), h.mean(0) + 3 * h.std(0)
+    stealthy = np.asarray(A.alie(key, v, mask))[-1]
+    assert np.all((lo <= stealthy) & (stealthy <= hi))
+    loud = np.asarray(A.omniscient(key, v, mask))[-1]
+    assert np.any((loud < lo) | (loud > hi))

@@ -481,6 +481,19 @@ def test_auditor_flags_hash_unstable_config():
     assert good.status == "ok", good.detail
 
 
+def test_auditor_flags_consensus_validity_region():
+    from repro.lint.auditor import consensus_validity_audit
+
+    bad = consensus_validity_audit("dist.consensus", n=8, f=2)
+    assert bad.status == "fail"
+    assert "n > 5f" in bad.detail
+    boundary = consensus_validity_audit("dist.consensus", n=10, f=2)
+    assert boundary.status == "fail"  # n == 5f is still invalid
+    good = consensus_validity_audit("dist.consensus", n=8, f=1)
+    assert good.status == "ok", good.detail
+    assert good.check_id == "RL210"
+
+
 def test_auditor_full_run_has_no_failures():
     """The shipped tree passes its own audit (skips allowed off-mesh)."""
     from repro.lint.auditor import run_audit
