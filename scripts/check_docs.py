@@ -144,6 +144,55 @@ def check_metric_table(design: Path):
     return errors
 
 
+def check_regime_table(design: Path):
+    """DESIGN.md §14 regime matrix must match ``benchmarks.regimes``
+    exactly (both directions): the table header enumerates every
+    estimator cell of the benchmark grid, and the first column every
+    attack. A regime added to the harness but not the table (or the
+    reverse) is drift between the documented claim and what CI runs.
+    Stdlib-only: the benchmark module's constants import without jax."""
+    sys.path.insert(0, str(design.resolve().parent))
+    from benchmarks.regimes import ATTACKS, ESTIMATOR_CELLS
+
+    header = None
+    attacks_doc = []
+    for _, line in _strip_fences(design.read_text()):
+        s = line.strip()
+        if header is None:
+            if s.startswith("|") and "Attack" in s and "`mean`" in s:
+                header = re.findall(r"`([\w\-]+)`", s)
+            continue
+        if not s.startswith("|"):
+            break
+        first = re.match(r"^\|\s*`([\w\-]+)`\s*\|", s)
+        if first:
+            attacks_doc.append(first.group(1))
+
+    errors = []
+    if header is None:
+        return ["DESIGN.md §14: regime matrix table not found "
+                "(header row with backticked estimator cells)"]
+    for est in ESTIMATOR_CELLS:
+        if est not in header:
+            errors.append(f"DESIGN.md §14: estimator cell {est!r} "
+                          f"(benchmarks.regimes.ESTIMATOR_CELLS) missing "
+                          f"from the regime table header")
+    for est in header:
+        if est not in ESTIMATOR_CELLS:
+            errors.append(f"DESIGN.md §14: regime table header column "
+                          f"{est!r} is not a benchmark estimator cell")
+    for atk in ATTACKS:
+        if atk not in attacks_doc:
+            errors.append(f"DESIGN.md §14: attack {atk!r} "
+                          f"(benchmarks.regimes.ATTACKS) missing from "
+                          f"the regime table rows")
+    for atk in attacks_doc:
+        if atk not in ATTACKS:
+            errors.append(f"DESIGN.md §14: regime table row {atk!r} is "
+                          f"not a benchmark attack")
+    return errors
+
+
 def main(argv):
     root = Path(__file__).resolve().parent.parent
     files = [root / a for a in argv] if argv else [root / "README.md",
@@ -162,6 +211,9 @@ def main(argv):
             errors.extend(check_metric_table(md))
             print("checked DESIGN.md §11 metric table against "
                   "repro.obs.catalog")
+            errors.extend(check_regime_table(md))
+            print("checked DESIGN.md §14 regime matrix against "
+                  "benchmarks.regimes")
     if errors:
         print("\nBROKEN LINKS:")
         for e in errors:

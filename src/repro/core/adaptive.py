@@ -1,0 +1,275 @@
+"""Adaptive aggregation tier: estimators that estimate alpha instead of
+assuming it (DESIGN.md §14).
+
+The fixed estimators (§7) are calibrated for a *known* contamination
+fraction; the omniscient attacks (``core.attacks``: alie / ipm / mimic)
+land their payloads inside the honest spread, where the §11 MAD-z
+suspicion census is blind and a fixed-K VRMOM keeps its honest-regime
+bias/variance trade-off while the contamination drags it. This module
+adds the online layer:
+
+* ``census`` — a per-stack worker census combining two orthogonal
+  signals: the §11 robust z-score over row deviations (exact against
+  loud attacks) and a *duplicate-multiplicity* census (exact against
+  coordinated attacks, whose Byzantine rows are bitwise-identical
+  copies of one payload while honest continuous rows never collide).
+  Majority duplicate clusters are exempt — the serve wire's honest
+  replicas are deliberately bit-identical (DESIGN.md §12).
+* ``estimate_alpha`` — the censused contamination estimate
+  ``alpha_hat`` in ``[0, 0.5)``; exactly ``0.0`` on honest stacks.
+* ``auto_gm`` — Weiszfeld-iterated geometric median with online
+  per-worker weights (blades-style AutoGM). Shares the weighted
+  Weiszfeld body with ``aggregators.geometric_median``; honest stacks
+  produce all-ones weights, so the honest output is bit-identical to
+  the plain geometric median by construction.
+* ``vrmom_adaptive`` — imputes censused rows at the coordinatewise
+  median, then selects VRMOM's K from a *static* ladder by
+  ``alpha_hat`` (branchless ``jnp.where`` over precomputed candidates:
+  the ``psi_sum``/``deltas`` tables stay host-side ``lru_cache``-d per
+  static int K). ``alpha_hat == 0`` selects the configured K on the
+  unmodified stack — bit-identical to fixed-K ``vrmom``.
+* ``AdaptiveState`` / ``apply_adaptive`` — momentum-smoothed
+  aggregation state (EMA per-worker weights + aggregate momentum)
+  threaded as an *explicit carry*: jit-pure, no Python state, enforced
+  by lint rule RL211.
+
+Everything here is a pure function of its operands; the only module
+globals are immutable constants.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import aggregators as _agg
+from .vrmom import mad_scale, mom, vrmom
+
+__all__ = [
+    "StackCensus",
+    "AdaptiveState",
+    "census",
+    "estimate_alpha",
+    "worker_weights",
+    "auto_gm",
+    "vrmom_adaptive",
+    "select_k",
+    "k_ladder",
+    "init_state",
+    "apply_adaptive",
+]
+
+# Suspicion-score convention mirrored from obs.diag (§11): same robust
+# z-score, same threshold, same relative floor — test_regimes pins the
+# parity so the census and the telemetry never drift apart.
+Z_THRESH = 4.0
+REL_FLOOR = 0.05
+
+# Residual trust weight for rows the z-census flags as loud outliers.
+SUSPECT_WEIGHT = 1e-3
+
+# A "loud" row must ALSO deviate by a multiple of the typical honest
+# deviation, not just clear the z threshold: honest rows concentrate at
+# dev/mom(dev) = 1 + O(1/sqrt(C)), so an honest stack cannot produce a
+# 1.5x row even at seeds where the MAD-z alone has a false positive —
+# this is what makes the honest-regime bit-identity guarantee hold
+# unconditionally rather than with high probability.
+LOUD_RATIO = 1.5
+
+# alpha_hat cutoffs for the static K ladder: (<= first -> configured K,
+# <= second -> K//2, above -> K=1). At alpha_hat = 0 the first branch
+# is taken exactly, preserving fixed-K bit-identity.
+K_LADDER_THRESHOLDS = (0.02, 0.2)
+
+# Relative pairwise-distance threshold for the duplicate census. Rows
+# of one coordinated payload are bitwise-identical (D2 == 0.0 exactly);
+# honest continuous rows sit at the stack's typical pairwise scale.
+DUP_REL_TOL = 1e-10
+
+
+class StackCensus(NamedTuple):
+    """Per-stack worker census (W = rows on the worker axis)."""
+
+    z: jax.Array             # [W] f32 — §11 robust z-score of row deviation
+    cluster_size: jax.Array  # [W] i32 — duplicate-cluster multiplicity (>= 1)
+    suspected: jax.Array     # [W] bool — z-outlier OR minority duplicate
+    alpha_hat: jax.Array     # []  f32 — censused contamination fraction
+    weights: jax.Array       # [W] f32 — instantaneous trust weights
+    center: jax.Array        # [C] f32 — coordinatewise median of the stack
+
+
+class AdaptiveState(NamedTuple):
+    """Explicit momentum-smoothed aggregation carry (RL211: adaptive
+    state is jit-pure data threaded by the caller, never module
+    state)."""
+
+    weights: jax.Array    # [W] f32 — EMA per-worker trust weights
+    momentum: jax.Array   # [C] f32 — EMA of the flat aggregate
+    step: jax.Array       # []  i32 — update count
+    alpha_hat: jax.Array  # []  f32 — EMA contamination estimate
+
+
+def _flat32(x, axis: int):
+    """Move the worker axis first and flatten to f32 ``[W, C]``."""
+    x = jnp.moveaxis(x, axis, 0)
+    return x.reshape(x.shape[0], -1).astype(jnp.float32), x.shape[1:]
+
+
+def census(flat) -> StackCensus:
+    """Worker census of a flat ``[W, C]`` stack (f32).
+
+    Signal 1 (loud attacks): the §11 robust z-score of each row's L2
+    deviation from the coordinatewise median center. Signal 2
+    (coordinated attacks): duplicate multiplicity — pairwise squared
+    distances at 0 relative to the stack's median pairwise distance
+    mark rows sharing one payload; clusters holding more than half the
+    stack are the honest consensus (serve replicas) and stay exempt.
+    Honest continuous stacks trip neither signal, so ``suspected`` is
+    all-false and ``alpha_hat`` is exactly ``0.0``.
+    """
+    w = flat.shape[0]
+    center = jnp.median(flat, axis=0)
+    dev = jnp.sqrt(jnp.sum(jnp.square(flat - center[None]), axis=-1))
+    c_dev = mom(dev, axis=0)
+    scale = mad_scale(dev, axis=0, center=c_dev)
+    z = (dev - c_dev) / (scale + REL_FLOOR * c_dev + 1e-12)
+    z_sus = (z > Z_THRESH) & (dev > LOUD_RATIO * c_dev)
+
+    d2 = jnp.sum(jnp.square(flat[:, None, :] - flat[None, :, :]), axis=-1)
+    dup = d2 <= (DUP_REL_TOL * jnp.median(d2) + 1e-30)
+    csize = jnp.sum(dup.astype(jnp.int32), axis=1)
+    dup_sus = (csize > 1) & (csize <= w // 2)
+
+    suspected = z_sus | dup_sus
+    alpha_hat = jnp.clip(jnp.mean(suspected.astype(jnp.float32)), 0.0, 0.499)
+    cs = csize.astype(jnp.float32)
+    weights = (jnp.where(dup_sus, 1.0 / cs, 1.0)
+               * jnp.where(z_sus, SUSPECT_WEIGHT, 1.0))
+    return StackCensus(z=z, cluster_size=csize, suspected=suspected,
+                       alpha_hat=alpha_hat, weights=weights, center=center)
+
+
+def estimate_alpha(x, axis: int = 0) -> jax.Array:
+    """Online contamination estimate over a stacked array: the censused
+    fraction of suspected rows, in ``[0, 0.5)``; ``0.0`` exactly on
+    honest stacks."""
+    flat, _ = _flat32(x, axis)
+    return census(flat).alpha_hat
+
+
+def worker_weights(x, axis: int = 0) -> jax.Array:
+    """[W] instantaneous per-worker trust weights (all exactly 1.0 on
+    honest stacks): minority duplicate clusters share one vote
+    (``1/cluster_size``), loud z-outliers keep ``SUSPECT_WEIGHT``."""
+    flat, _ = _flat32(x, axis)
+    return census(flat).weights
+
+
+def auto_gm(x, axis: int = 0, iters: int = 8, eps: float = 1e-8,
+            weights=None):
+    """Auto-weighted geometric median: weighted Weiszfeld under the
+    census trust weights (or caller-provided ``weights`` [W], e.g. the
+    EMA-smoothed state). Honest stacks give all-ones weights and a
+    result bit-identical to ``aggregators.geometric_median``."""
+    flat, rest = _flat32(x, axis)
+    pi = census(flat).weights if weights is None else weights
+    y = _agg.weiszfeld(flat, pi, iters=iters, eps=eps)
+    return y.reshape(rest).astype(x.dtype)
+
+
+def k_ladder(K: int) -> Tuple[int, ...]:
+    """Static K candidates, largest first: configured K for the honest
+    regime, K//2 for moderate contamination, K=1 for heavy
+    contamination (``vrmom_correction_bound`` grows with K, so the
+    ladder trades variance-reduction for contamination bias as
+    ``alpha_hat`` rises). Deduplicated, order-preserving."""
+    out = []
+    for k in (int(K), max(int(K) // 2, 1), 1):
+        if k not in out:
+            out.append(k)
+    return tuple(out)
+
+
+def _select(alpha_hat, candidates):
+    """Branchless ladder select: candidates[i] for alpha_hat below
+    K_LADDER_THRESHOLDS[i], last candidate above them all."""
+    out = candidates[-1]
+    for thr, cand in zip(reversed(K_LADDER_THRESHOLDS[:len(candidates) - 1]),
+                         reversed(candidates[:-1])):
+        out = jnp.where(alpha_hat <= thr, cand, out)
+    return out
+
+
+def select_k(alpha_hat, K: int) -> jax.Array:
+    """[] f32 — the ladder rung ``vrmom_adaptive`` runs at for this
+    ``alpha_hat`` (telemetry mirror of the internal select)."""
+    lad = k_ladder(K)
+    return _select(alpha_hat, tuple(jnp.float32(k) for k in lad))
+
+
+def vrmom_adaptive(x, K: int = 10, axis: int = 0):
+    """Adaptive-K VRMOM: census the stack, impute suspected rows at the
+    coordinatewise median, run VRMOM at every static ladder rung, and
+    select the rung by ``alpha_hat`` (branchless — the per-K
+    ``deltas``/``psi_sum`` tables stay host-side cached statics).
+
+    ``alpha_hat == 0`` (honest stack) imputes nothing and selects the
+    configured K: bit-identical to fixed-K ``vrmom``.
+    """
+    flat, rest = _flat32(x, axis)
+    cen = census(flat)
+    x_adj = jnp.where(cen.suspected[:, None], cen.center[None, :], flat)
+    outs = tuple(vrmom(x_adj, K=k, axis=0) for k in k_ladder(K))
+    y = _select(cen.alpha_hat, outs)
+    return y.reshape(rest).astype(x.dtype)
+
+
+def init_state(n_workers: int, dim: int) -> AdaptiveState:
+    """Honest-prior carry: unit trust, zero momentum, step 0."""
+    return AdaptiveState(
+        weights=jnp.ones((n_workers,), jnp.float32),
+        momentum=jnp.zeros((dim,), jnp.float32),
+        step=jnp.zeros((), jnp.int32),
+        alpha_hat=jnp.zeros((), jnp.float32),
+    )
+
+
+def apply_adaptive(method: str, x, state: AdaptiveState, axis: int = 0, *,
+                   K: int = 10, weights_beta: float = 0.5,
+                   momentum: float = 0.0
+                   ) -> Tuple[jax.Array, AdaptiveState]:
+    """One stateful adaptive aggregate: ``(aggregate, new_state)``.
+
+    Census the stack, EMA the per-worker trust weights
+    (``w <- (1-beta)*w + beta*w_inst``; unit weights are a fixed point,
+    so the honest regime stays bit-identical to the stateless apply),
+    aggregate under the smoothed weights, and optionally momentum-smooth
+    the flat aggregate (bias-corrected EMA; ``momentum=0.0`` returns
+    the instantaneous aggregate exactly). The state is an explicit
+    carry — this function is jit-pure (RL211).
+    """
+    if method not in ("auto_gm", "vrmom_adaptive"):
+        raise ValueError(f"not an adaptive method: {method!r}")
+    flat, rest = _flat32(x, axis)
+    cen = census(flat)
+    beta = jnp.float32(weights_beta)
+    w_ema = (1.0 - beta) * state.weights + beta * cen.weights
+    a_ema = (1.0 - beta) * state.alpha_hat + beta * cen.alpha_hat
+    if method == "auto_gm":
+        agg = _agg.weiszfeld(flat, w_ema)
+    else:
+        sus = w_ema < 0.5
+        x_adj = jnp.where(sus[:, None], cen.center[None, :], flat)
+        outs = tuple(vrmom(x_adj, K=k, axis=0) for k in k_ladder(K))
+        agg = _select(a_ema, outs)
+    step = state.step + 1
+    mu = jnp.float32(momentum)
+    m_new = mu * state.momentum + (1.0 - mu) * agg
+    if momentum:
+        out = m_new / (1.0 - mu ** step.astype(jnp.float32))
+    else:
+        out = agg
+    new_state = AdaptiveState(weights=w_ema, momentum=m_new, step=step,
+                              alpha_hat=a_ema)
+    return out.reshape(rest).astype(x.dtype), new_state

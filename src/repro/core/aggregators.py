@@ -30,6 +30,7 @@ __all__ = [
     "mean",
     "median",
     "trimmed_mean",
+    "weiszfeld",
     "geometric_median",
     "krum",
     "vrmom",
@@ -66,6 +67,29 @@ def trimmed_mean(x, beta: float = 0.1, axis: int = 0):
     return jnp.mean(xs[tuple(sl)], axis=axis)
 
 
+def weiszfeld(flat, pi, iters: int = 8, eps: float = 1e-8):
+    """Weighted Weiszfeld iteration on a flat ``[m, C]`` stack.
+
+    ``pi`` [m] are prior row weights; the fixed point is the minimizer
+    of ``sum_i pi_i * ||y - x_i||``. With ``pi = ones`` this is the
+    plain geometric median — ``geometric_median`` and the adaptive
+    ``auto_gm`` tier (core.adaptive) share this exact body, so the
+    honest regime (all weights exactly 1.0) is bit-identical between
+    them by construction.
+    """
+    pi = pi.astype(flat.dtype)
+    y = jnp.sum(flat * pi[:, None], axis=0) / jnp.sum(pi)
+
+    def body(y, _):
+        d = jnp.sqrt(jnp.sum((flat - y) ** 2, axis=-1) + eps)
+        w = pi / d
+        y = jnp.sum(flat * w[:, None], axis=0) / jnp.sum(w)
+        return y, None
+
+    y, _ = jax.lax.scan(body, y, None, length=iters)
+    return y
+
+
 def geometric_median(x, iters: int = 8, eps: float = 1e-8, axis: int = 0):
     """Geometric median over workers via Weiszfeld iterations.
 
@@ -74,15 +98,7 @@ def geometric_median(x, iters: int = 8, eps: float = 1e-8, axis: int = 0):
     x = jnp.moveaxis(x, axis, 0)
     m = x.shape[0]
     flat = x.reshape(m, -1)
-    y = jnp.mean(flat, axis=0)
-
-    def body(y, _):
-        d = jnp.sqrt(jnp.sum((flat - y) ** 2, axis=-1) + eps)
-        w = 1.0 / d
-        y = jnp.sum(flat * w[:, None], axis=0) / jnp.sum(w)
-        return y, None
-
-    y, _ = jax.lax.scan(body, y, None, length=iters)
+    y = weiszfeld(flat, jnp.ones((m,), flat.dtype), iters=iters, eps=eps)
     return y.reshape(x.shape[1:])
 
 

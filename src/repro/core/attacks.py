@@ -20,12 +20,15 @@ __all__ = [
     "gaussian",
     "omniscient",
     "alie",
+    "ipm",
+    "mimic",
     "bitflip",
     "signflip",
     "zero",
     "wrong_value",
     "get",
     "REGISTRY",
+    "OMNISCIENT_ATTACKS",
 ]
 
 
@@ -59,33 +62,77 @@ def omniscient(key, v, mask, scale: float = 1e10):
     return _apply(mask, v, -scale * jnp.broadcast_to(honest_mean, v.shape))
 
 
+def _honest_moments(v, mask):
+    """Per-coordinate mean/std over the *unmasked* rows (the adversary
+    observes honest messages, not its own payloads). Returns f32
+    ``(mean, std)`` with keepdims on the row axis."""
+    f32 = v.astype(jnp.float32)
+    keep = (~mask).reshape((-1,) + (1,) * (v.ndim - 1)).astype(jnp.float32)
+    n_h = jnp.maximum(jnp.sum(keep, axis=0), 1.0)
+    mean = jnp.sum(f32 * keep, axis=0, keepdims=True) / n_h
+    var = jnp.sum((f32 - mean) ** 2 * keep, axis=0, keepdims=True) / n_h
+    return mean, jnp.sqrt(jnp.maximum(var, 0.0))
+
+
 def alie(key, v, mask, z=None):
     """ALIE ("a little is enough", Baruch et al. 2019): Byzantine rows
     sit at ``honest_mean + z * honest_std`` per coordinate — inside the
     honest point cloud, so naive trimming cannot separate them, yet
     coordinated, so they drag every mean-like aggregate one-sided.
 
-    ``z`` defaults to the paper's omniscient choice
-    ``Phi^{-1}((n - m - s) / (n - m))`` with ``s = floor(n/2 + 1) - m``
-    — the largest offset at which the corrupt rows still out-vote
-    enough honest tail mass to capture the median. Honest statistics
-    are computed over the unmasked rows only (the adversary observes
-    honest messages, not its own payloads).
+    ``z`` defaults to the paper's omniscient choice: with ``s =
+    floor(n/2) + 1 - m`` honest rows to out-vote (the corrupt block
+    plus the ``s`` honest values above it must capture the median),
+    the target quantile of the ``n_h = n - m`` honest draws is the
+    plotting position ``q = (n_h - s + 1) / (n_h + 1)`` and
+    ``z = Phi^{-1}(q)``. The continuity-corrected ``+1`` keeps ``q``
+    strictly inside (0.5, 1) for every n >= 2, and a floor
+    ``z >= 0.2`` keeps the payload a genuine offset at the boundary
+    sizes (n <= 4) where the quantile argument alone degenerates to
+    the honest mean.
     """
-    f32 = v.astype(jnp.float32)
-    keep = (~mask).reshape((-1,) + (1,) * (v.ndim - 1)).astype(jnp.float32)
-    n_h = jnp.maximum(jnp.sum(keep, axis=0), 1.0)
-    mean = jnp.sum(f32 * keep, axis=0, keepdims=True) / n_h
-    var = jnp.sum((f32 - mean) ** 2 * keep, axis=0, keepdims=True) / n_h
-    std = jnp.sqrt(jnp.maximum(var, 0.0))
+    mean, std = _honest_moments(v, mask)
     if z is None:
-        n = jnp.float32(v.shape[0])
+        n = v.shape[0]
         m = jnp.sum(mask.astype(jnp.float32))
-        s = jnp.floor(n / 2.0 + 1.0) - m
-        q = jnp.clip((n - m - s) / jnp.maximum(n - m, 1.0), 0.5, 1.0 - 1e-6)
-        z = jax.scipy.special.ndtri(q)
+        n_h = jnp.maximum(jnp.float32(n) - m, 1.0)
+        s = jnp.float32(n // 2 + 1) - m
+        q = jnp.clip((n_h - s + 1.0) / (n_h + 1.0), 0.5, 1.0 - 1e-6)
+        z = jnp.maximum(jax.scipy.special.ndtri(q), 0.2)
     corrupt = (mean + z * std).astype(v.dtype)
     return _apply(mask, v, jnp.broadcast_to(corrupt, v.shape))
+
+
+def ipm(key, v, mask, eps: float = 0.5):
+    """Inner-product manipulation (Xie et al. 2020): every Byzantine
+    row reports ``-eps * honest_mean``, making the corrupt block's
+    inner product with the honest direction negative while each
+    individual coordinate stays at honest-mean scale. Small ``eps``
+    is a stealth attack (the payload sits inside the honest spread);
+    large ``eps`` degenerates to the loud ``omniscient`` attack.
+    """
+    mean, _ = _honest_moments(v, mask)
+    corrupt = (-eps * mean).astype(v.dtype)
+    return _apply(mask, v, jnp.broadcast_to(corrupt, v.shape))
+
+
+def mimic(key, v, mask):
+    """Coordinated mimic attack (Karimireddy et al. 2022): every
+    Byzantine row replays the honest row farthest from the honest
+    mean. Each payload is a *real* honest message — per-row outlier
+    tests can never flag it — but the coordinated copies overweight
+    one honest extreme, biasing mean-like aggregates while staying
+    inside the honest support. Honest statistics and the argmax are
+    computed over the unmasked rows only.
+    """
+    mean, _ = _honest_moments(v, mask)
+    f32 = v.astype(jnp.float32)
+    dev = jnp.sum((f32 - mean) ** 2,
+                  axis=tuple(range(1, v.ndim)))  # [n] per-row deviation
+    dev = jnp.where(mask, -jnp.inf, dev)  # adversary picks an honest victim
+    victim = jnp.argmax(dev)
+    corrupt = jnp.broadcast_to(v[victim][None], v.shape)
+    return _apply(mask, v, corrupt)
 
 
 def bitflip(key, v, mask, n_dims: int = 5):
@@ -119,11 +166,19 @@ REGISTRY = {
     "gaussian": gaussian,
     "omniscient": omniscient,
     "alie": alie,
+    "ipm": ipm,
+    "mimic": mimic,
     "bitflip": bitflip,
     "signflip": signflip,
     "zero": zero,
     "wrong_value": wrong_value,
 }
+
+# Attacks whose payload is a function of the observed honest stack
+# (the adversary sees all honest updates before choosing its own).
+# They share the oblivious zoo's (key, v, mask) contract, so they
+# compose unchanged with dist.faults and the consensus pin-mask.
+OMNISCIENT_ATTACKS = ("omniscient", "alie", "ipm", "mimic")
 
 
 def get(name: str) -> Attack:

@@ -49,6 +49,7 @@ __all__ = [
     "Estimator",
     "COORDINATEWISE_METHODS",
     "WHOLE_VECTOR_METHODS",
+    "ADAPTIVE_METHODS",
     "METHODS",
     "BACKENDS",
 ]
@@ -59,7 +60,15 @@ COORDINATEWISE_METHODS = ("mean", "median", "mom", "trimmed_mean", "vrmom")
 # Whole-vector methods score/select entire worker rows; chunking them
 # changes their semantics, so they are valid only on full vectors.
 WHOLE_VECTOR_METHODS = ("geometric_median", "krum")
-METHODS = COORDINATEWISE_METHODS + WHOLE_VECTOR_METHODS
+# Adaptive methods (DESIGN.md §14) census entire worker rows to
+# estimate alpha online, then aggregate under the censused weights.
+# Like the whole-vector tier they need full rows (never coordinate
+# shards); unlike it their output is a plain coordinate-wise-shaped
+# aggregate, so every wire that materializes full rows (serve logits,
+# the symmetric-triangle stats wire, the full-stack auto wire) accepts
+# them via ``require_stackable``.
+ADAPTIVE_METHODS = ("auto_gm", "vrmom_adaptive")
+METHODS = COORDINATEWISE_METHODS + WHOLE_VECTOR_METHODS + ADAPTIVE_METHODS
 BACKENDS = ("auto", "jnp", "ref", "pallas")
 
 # Methods the auto backend routes to the fused kernel: the ones whose
@@ -124,6 +133,26 @@ class Estimator(NamedTuple):
                 f"one of {COORDINATEWISE_METHODS} instead.")
         return self
 
+    @property
+    def adaptive(self) -> bool:
+        return self.method in ADAPTIVE_METHODS
+
+    def require_stackable(self, where: str = "full-stack aggregation"):
+        """Gate for wires that materialize complete worker rows (serve
+        replica logits, the symmetric stats triangle, the flattened
+        full-stack wire): coordinate-wise and adaptive estimators both
+        produce a per-coordinate aggregate there. Whole-vector
+        *selectors* (geometric_median, krum) stay rejected — they are
+        served by the jnp backend directly, not by these wires."""
+        if not (self.coordinatewise or self.adaptive):
+            raise ValueError(
+                f"estimator {self.method!r} cannot be used for {where}: "
+                f"only coordinate-wise ({COORDINATEWISE_METHODS}) and "
+                f"adaptive ({ADAPTIVE_METHODS}) estimators aggregate a "
+                f"full row stack into a per-coordinate result; "
+                f"{self.method!r} is a whole-vector selector.")
+        return self
+
     def validate(self, m: int) -> "Estimator":
         """Trace-time validation of the spec against a worker count."""
         if self.method not in METHODS:
@@ -149,8 +178,8 @@ class Estimator(NamedTuple):
                 raise ValueError(
                     f"trimmed_mean with beta={self.beta} trims "
                     f"2*{k} >= m={m} rows: nothing left to average")
-        if self.method == "vrmom" and self.K < 1:
-            raise ValueError(f"vrmom needs K >= 1, got K={self.K}")
+        if self.method in ("vrmom", "vrmom_adaptive") and self.K < 1:
+            raise ValueError(f"{self.method} needs K >= 1, got K={self.K}")
         return self
 
     # -- dispatch -----------------------------------------------------------
@@ -233,6 +262,38 @@ class Estimator(NamedTuple):
         topv, topi = jax.lax.top_k(agg, top_k)
         return agg, topv, topi.astype(jnp.int32)
 
+    def init_adaptive_state(self, n_workers: int, dim: int):
+        """Fresh honest-prior :class:`repro.core.adaptive.AdaptiveState`
+        carry for ``apply_adaptive`` (adaptive methods only)."""
+        from . import adaptive as _AD
+
+        if not self.adaptive:
+            raise ValueError(
+                f"estimator {self.method!r} carries no adaptive state; "
+                f"adaptive methods: {ADAPTIVE_METHODS}")
+        return _AD.init_state(n_workers, dim)
+
+    def apply_adaptive(self, x, state, axis: int = 0, *,
+                       weights_beta: float = 0.5, momentum: float = 0.0):
+        """Stateful adaptive aggregate: ``(aggregate, new_state)``.
+
+        The momentum-smoothed per-worker weights ride ``state`` as an
+        explicit jit-pure carry (RL211) — thread the returned state
+        into the next call. Stateless ``apply`` on an honest stack and
+        ``apply_adaptive`` from a fresh state agree bit-for-bit (unit
+        weights are an EMA fixed point and ``momentum=0.0`` is exact).
+        """
+        from . import adaptive as _AD
+
+        if not self.adaptive:
+            raise ValueError(
+                f"estimator {self.method!r} carries no adaptive state; "
+                f"adaptive methods: {ADAPTIVE_METHODS}")
+        self.validate(x.shape[axis])
+        return _AD.apply_adaptive(self.method, x, state, axis=axis,
+                                  K=self.K, weights_beta=weights_beta,
+                                  momentum=momentum)
+
     def apply_with_diag(self, x, axis: int = 0):
         """``apply`` plus per-worker diagnostics (DESIGN.md §11).
 
@@ -259,6 +320,12 @@ class Estimator(NamedTuple):
             return _A.vrmom(x, K=self.K, axis=axis)
         if self.method == "geometric_median":
             return _A.geometric_median(x, axis=axis)
+        if self.method in ADAPTIVE_METHODS:
+            from . import adaptive as _AD
+
+            if self.method == "auto_gm":
+                return _AD.auto_gm(x, axis=axis)
+            return _AD.vrmom_adaptive(x, K=self.K, axis=axis)
         return _A.krum(x, n_byzantine=self.n_byzantine, axis=axis)
 
     def _apply_ref(self, flat):

@@ -191,7 +191,8 @@ def aggregate_gradients(
     usable on full vectors).
     """
     est = Estimator.coerce(aggregator, backend="jnp", **agg_kwargs)
-    if isinstance(aggregator, str) and est.method == "vrmom":
+    if isinstance(aggregator, str) and est.method in ("vrmom",
+                                                      "vrmom_adaptive"):
         est = est._replace(K=K)  # bind the legacy K arg; an explicit
         # Estimator keeps its own K verbatim
     non_mad = not (isinstance(scale, str) and scale == "mad")

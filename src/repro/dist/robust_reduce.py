@@ -55,6 +55,7 @@ __all__ = [
     "aggregate",
     "aggregate_stacked_rrs",
     "aggregate_stacked_auto",
+    "aggregate_stacked_adaptive",
     "aggregate_symmetric_stacked",
     "robust_backward",
     "robust_dot",
@@ -187,8 +188,17 @@ def aggregate_stacked_auto(grads, est: EstimatorLike = "vrmom", *,
     The consensus path returns ``(pytree, ConsensusAux)`` (diag, when
     requested, appended last) — the direct path's signature is
     unchanged.
+
+    Adaptive estimators (§14) take the same full ``[W, C]`` wire on the
+    direct path — their census needs complete worker rows, so per-leaf
+    aggregation would fragment the signal; coordinate-wise estimators
+    keep the per-leaf path.
     """
-    est = _wire_estimator(est)
+    est = Estimator.coerce(est)
+    if est.adaptive:
+        est.require_stackable("full-stack aggregation (dist.robust_reduce)")
+    else:
+        est = _wire_estimator(est)
     if reduce_backend not in ("direct", "consensus"):
         raise ValueError(f"unknown reduce_backend {reduce_backend!r}; "
                          "known: ('direct', 'consensus')")
@@ -213,15 +223,65 @@ def aggregate_stacked_auto(grads, est: EstimatorLike = "vrmom", *,
             return out, aux, _with_tree_diag(grads, out)[1]
         return out, aux
 
-    def one(g):
-        flat = g.reshape(g.shape[0], -1).astype(jnp.float32)
-        out = est.apply(flat, axis=0)
-        return out.reshape(g.shape[1:]).astype(g.dtype)
+    if est.adaptive:
+        out = _wire_apply(grads, lambda wire: est.apply(wire, axis=0))
+    else:
+        def one(g):
+            flat = g.reshape(g.shape[0], -1).astype(jnp.float32)
+            out = est.apply(flat, axis=0)
+            return out.reshape(g.shape[1:]).astype(g.dtype)
 
-    out = jax.tree.map(one, grads)
+        out = jax.tree.map(one, grads)
     if with_diag:
         return _with_tree_diag(grads, out)
     return out
+
+
+def _wire_apply(grads, agg_fn):
+    """Ravel all leaves onto one f32 ``[W, C]`` wire, apply
+    ``agg_fn(wire) -> [C]`` (or ``(out, *aux)``), split the aggregate
+    back into the tree. Returns the tree, or ``(tree, *aux)``."""
+    leaves, treedef = jax.tree.flatten(grads)
+    W = leaves[0].shape[0]
+    wire = jnp.concatenate(
+        [l.reshape(W, -1).astype(jnp.float32) for l in leaves], axis=1)
+    res = agg_fn(wire)
+    agg, aux = (res, ()) if isinstance(res, jax.Array) else (res[0], res[1:])
+    outs, off = [], 0
+    for l in leaves:
+        size = l.size // W
+        outs.append(agg[off:off + size]
+                    .reshape(l.shape[1:]).astype(l.dtype))
+        off += size
+    out = jax.tree.unflatten(treedef, outs)
+    return out if not aux else (out,) + tuple(aux)
+
+
+def aggregate_stacked_adaptive(grads, state, est: EstimatorLike, *,
+                               with_diag: bool = False,
+                               weights_beta: float = 0.5,
+                               momentum: float = 0.0):
+    """Stateful adaptive aggregate of a stacked-gradient pytree.
+
+    All leaves ride one full ``[W, C]`` wire (the census needs complete
+    worker rows) through ``Estimator.apply_adaptive``; the
+    :class:`repro.core.adaptive.AdaptiveState` carry threads explicitly
+    through the caller's step (RL211). Returns
+    ``(pytree, new_state)``, diag appended last when requested.
+    """
+    est = Estimator.coerce(est).require_stackable(
+        "full-stack adaptive aggregation (dist.robust_reduce)")
+    if not est.adaptive:
+        raise ValueError(
+            f"aggregate_stacked_adaptive needs an adaptive estimator, "
+            f"got {est.method!r}")
+    out, new_state = _wire_apply(
+        grads, lambda wire: est.apply_adaptive(
+            wire, state, axis=0, weights_beta=weights_beta,
+            momentum=momentum))
+    if with_diag:
+        return out, new_state, _with_tree_diag(grads, out)[1]
+    return out, new_state
 
 
 def aggregate_symmetric_stacked(mats, est: EstimatorLike = "vrmom"):
@@ -235,8 +295,12 @@ def aggregate_symmetric_stacked(mats, est: EstimatorLike = "vrmom"):
     symmetric (coordinate-wise aggregation of a symmetric stack is
     symmetric in exact arithmetic, but downstream ``linalg.solve``
     deserves the guarantee, not the accident).
+
+    The triangle rows are complete per-worker records, so adaptive
+    estimators (§14) are accepted alongside the coordinate-wise tier.
     """
-    est = _wire_estimator(est)
+    est = Estimator.coerce(est).require_stackable(
+        "symmetric-stack aggregation (dist.robust_reduce)")
     W, p, q = mats.shape
     if p != q:
         raise ValueError(f"expected [W, p, p] symmetric stack, got {mats.shape}")

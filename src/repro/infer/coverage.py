@@ -81,6 +81,7 @@ def coverage_run(
     reduce_backend: str = "direct",
     consensus=None,
     fault_plan=None,
+    assumed_alpha: Optional[float] = None,
 ) -> CoverageCell:
     """Run one fully-compiled coverage cell; see module docstring.
 
@@ -95,6 +96,11 @@ def coverage_run(
     FaultPlan`` — the statistical cell under the decentralized wire,
     optionally with message loss and crashes injected inside each
     replication.
+
+    ``assumed_alpha``: the contamination fraction the *analyst* plugs
+    into the CI inflation, independent of the true ``alpha`` driving
+    the attack (``infer``'s regime-matrix knob, DESIGN.md §14).
+    ``None`` keeps the legacy oracle behavior (assume the truth).
     """
     theta_star = R.paper_theta_star(p)
     problem = (R.LinearRegressionProblem() if model == "linear"
@@ -125,7 +131,8 @@ def coverage_run(
             stat_attack = "none"
         res = infer(problem, shards_rep, theta_hat, estimator=estimator, K=K,
                     level=level, simultaneous=simultaneous,
-                    alpha=alpha, attack=stat_attack, key=ks)
+                    alpha=alpha, attack=stat_attack, key=ks,
+                    assumed_alpha=assumed_alpha)
         covered = jnp.logical_and(res.ci.lower <= theta_star,
                                   theta_star <= res.ci.upper)
         return covered, res.ci.upper - res.ci.lower, theta_hat - theta_star

@@ -59,6 +59,7 @@ __all__ = [
     "vrmom_cov_factor",
     "mom_cov_factor",
     "cov_factor",
+    "trimmed_mean_variance_factor",
     "contamination_inflation",
     "MachineStats",
     "machine_stats",
@@ -150,22 +151,55 @@ def mom_cov_factor(Sigma):
     return jnp.arcsin(corr) * jnp.outer(sd, sd)
 
 
+def trimmed_mean_variance_factor(beta: float) -> float:
+    """Asymptotic variance of the symmetric ``beta``-trimmed mean of
+    N(0,1) samples (host-side float; ``beta`` is static):
+
+        [ int_{z_b}^{z_{1-b}} z^2 phi(z) dz + 2 b z_b^2 ] / (1-2b)^2
+
+    with ``z_b = Phi^{-1}(beta)`` — the winsorized influence function
+    ``clip(z, z_b, z_{1-b}) / (1-2b)`` squared and integrated.
+    """
+    if not 0.0 <= beta < 0.5:
+        raise ValueError(f"beta must be in [0, 0.5), got {beta}")
+    if beta == 0.0:
+        return 1.0
+    from ..core.vrmom import _ndtri_np
+
+    zb = float(np.abs(_ndtri_np(beta)))
+    phi = math.exp(-0.5 * zb * zb) / math.sqrt(2.0 * math.pi)
+    # int_{-z}^{z} t^2 phi(t) dt = (2 Phi(z) - 1) - 2 z phi(z)
+    core = (1.0 - 2.0 * beta) - 2.0 * zb * phi
+    return (core + 2.0 * beta * zb * zb) / (1.0 - 2.0 * beta) ** 2
+
+
 def cov_factor(Sigma, est: Estimator):
     """The ``C(Sigma)`` transform matching an aggregation method.
 
     ``vrmom`` -> Theorem 4, ``median``/``mom`` -> Proposition 1,
-    ``mean`` -> identity (the CLT). Other estimators have no
-    normality theory in the paper and are rejected.
+    ``mean`` -> identity (the CLT), ``trimmed_mean`` -> winsorized-IF
+    scaling (exact diagonal; the near-linear IF makes the off-diagonal
+    scaling a close approximation). The adaptive tier (§14) uses its
+    honest-regime asymptotics — at ``alpha_hat = 0`` the adaptive
+    estimators ARE their fixed baselines: ``vrmom_adaptive`` ->
+    Theorem 4 at the configured K; ``auto_gm`` -> Proposition 1
+    (conservative: the spatial median is asymptotically at least as
+    efficient as the coordinate-wise median it is bounded by). Other
+    estimators have no normality theory in the paper and are rejected.
     """
-    if est.method == "vrmom":
+    if est.method in ("vrmom", "vrmom_adaptive"):
         return vrmom_cov_factor(Sigma, K=est.K)
-    if est.method in ("median", "mom"):
+    if est.method in ("median", "mom", "auto_gm"):
         return mom_cov_factor(Sigma)
+    if est.method == "trimmed_mean":
+        return (trimmed_mean_variance_factor(est.beta)
+                * jnp.asarray(Sigma, jnp.float32))
     if est.method == "mean":
         return jnp.asarray(Sigma, jnp.float32)
     raise ValueError(
         f"no asymptotic-normality result for estimator {est.method!r}; "
-        "inference supports vrmom, median/mom, and mean")
+        "inference supports vrmom, median/mom, trimmed_mean, mean, and "
+        "the adaptive tier (auto_gm, vrmom_adaptive)")
 
 
 def contamination_inflation(alpha: float,
@@ -209,7 +243,10 @@ def contamination_inflation(alpha: float,
         return 1.0
     est = Estimator.coerce(est)
     g = 1.0 / (1.0 - alpha)
-    if est.method in ("median", "mom"):
+    if est.method in ("median", "mom", "trimmed_mean", "auto_gm"):
+        # Rank-offset result for the median; the winsorized trimmed
+        # mean and the (median-bounded) auto_gm inherit the same
+        # first-order sparsity scaling.
         return g * g
     if est.method == "mean":
         return 1.0  # no robustness, no meaningful symmetric-garbage limit
@@ -281,7 +318,7 @@ def robust_moments(stats: MachineStats, est: Union[str, Estimator] = "vrmom"):
     """
     from ..dist.robust_reduce import aggregate_symmetric_stacked
 
-    est = Estimator.coerce(est, backend="jnp").require_coordinatewise(
+    est = Estimator.coerce(est, backend="jnp").require_stackable(
         "plug-in covariance aggregation (repro.infer)")
     H = aggregate_symmetric_stacked(stats.hessian, est)
     g2 = aggregate_symmetric_stacked(stats.grad2, est)
@@ -354,7 +391,8 @@ def infer(problem, shards, theta,
           estimator: Union[str, Estimator] = "vrmom", K: int = 10,
           level: float = 0.95, simultaneous: bool = False,
           alpha: float = 0.0, attack: str = "none",
-          key: Optional[jax.Array] = None) -> InferenceResult:
+          key: Optional[jax.Array] = None,
+          assumed_alpha: Optional[float] = None) -> InferenceResult:
     """Plug-in inference for an RCSL point estimate (DESIGN.md §9).
 
     ``estimator`` names the aggregation the point estimate was computed
@@ -365,10 +403,17 @@ def infer(problem, shards, theta,
     for simulations — with ``attack``/``key`` it corrupts the stacked
     statistics of ``floor(alpha*m)`` machines before aggregation, so the
     CI is computed under the same threat model the estimate survived.
+    ``assumed_alpha`` splits the two roles for the regime matrix
+    (DESIGN.md §14): corruption still happens at the *true* ``alpha``,
+    but the inflation uses the analyst's assumption — ``0.0`` models a
+    master unaware of the contamination (the fixed-estimator arms),
+    while the adaptive arms de-bias through their own census. Default
+    ``None`` keeps the legacy behavior (inflation at the true alpha).
     Fully jittable (estimator/K/level/shapes static).
     """
     est = Estimator.coerce(estimator, backend="jnp")
-    if isinstance(estimator, str) and est.method == "vrmom":
+    if isinstance(estimator, str) and est.method in ("vrmom",
+                                                     "vrmom_adaptive"):
         est = est._replace(K=K)
     stats = machine_stats(problem, theta, shards)
     if attack != "none" and alpha > 0.0:
@@ -377,7 +422,8 @@ def infer(problem, shards, theta,
         mask = _attacks.byzantine_mask(stats.hessian.shape[0], alpha)
         stats = corrupt_stats(key, stats, mask, attack)
     H, Sigma = robust_moments(stats, est)
-    Xi = sandwich_cov(H, Sigma, est) * contamination_inflation(alpha, est)
+    infl_alpha = alpha if assumed_alpha is None else assumed_alpha
+    Xi = sandwich_cov(H, Sigma, est) * contamination_inflation(infl_alpha, est)
     N = stats.hessian.shape[0] * stats.n
     ci = confidence_intervals(theta, Xi, N, level=level,
                               simultaneous=simultaneous)

@@ -1,4 +1,4 @@
-"""Layer-2 abstract trace auditor (RL201–RL210, DESIGN.md §10).
+"""Layer-2 abstract trace auditor (RL201–RL211, DESIGN.md §10).
 
 Drives the public entry points through ``jax.eval_shape`` /
 ``jax.make_jaxpr`` — no array is ever materialized, no kernel executed —
@@ -15,7 +15,8 @@ Entry points audited (ISSUE acceptance: ≥ 6):
 5. ``serve.engine.ServeEngine`` prefill + decode loop (RL207, RL204)
 6. ``infer.sandwich.infer`` (sandwich CI path)        (RL208)
 7. ``dist.consensus.aggregate_stacked_consensus``     (RL210)
-8. every static spec: Estimator / ConsensusConfig /
+8. ``core.adaptive`` init_state/apply_adaptive carry  (RL211)
+9. every static spec: Estimator / ConsensusConfig /
    FaultPlan / ArchConfig / RobustDecodeConfig /
    Sampling                                           (RL209)
 
@@ -404,6 +405,71 @@ def _check_consensus() -> List[AuditResult]:
 
 
 # ---------------------------------------------------------------------------
+# RL211 — adaptive aggregation state is an explicit jit-pure carry
+# ---------------------------------------------------------------------------
+
+_IMMUTABLE = (type(None), bool, int, float, complex, str, bytes,
+              tuple, frozenset)
+
+
+def _check_adaptive_carry() -> List[AuditResult]:
+    def body():
+        from ..core import adaptive as AD
+        from ..core.estimator import Estimator
+
+        # 1. no mutable module-level state: every non-callable global
+        # of repro.core.adaptive must be an immutable constant — a
+        # module-level list/dict/array would leak state across steps
+        # and silently break the jit-pure carry contract.
+        mutable = []
+        for gname, val in vars(AD).items():
+            if gname.startswith("_") or callable(val):
+                continue
+            if type(val).__name__ == "module":
+                continue
+            if type(val).__module__ == "__future__":
+                continue  # the `annotations` feature flag
+            if not isinstance(val, _IMMUTABLE):
+                mutable.append(f"{gname}: {type(val).__name__}")
+        assert not mutable, (
+            f"mutable module-level state in repro.core.adaptive: "
+            f"{mutable}")
+
+        # 2. init/apply round-trip under eval_shape: the carry's pytree
+        # structure, shapes, and dtypes must be a fixed point, so the
+        # train-step scan can thread it without retracing.
+        nw, dim = 9, 40
+        for method in ("auto_gm", "vrmom_adaptive"):
+            est = Estimator(method=method, K=4)
+            state = est.init_adaptive_state(nw, dim)
+            out, new_state = jax.eval_shape(
+                lambda x, s, e=est: e.apply_adaptive(x, s),
+                _sds((nw, dim), jnp.float32),
+                jax.tree.map(lambda l: _sds(l.shape, l.dtype), state))
+            assert out.shape == (dim,), (method, out.shape)
+            assert out.dtype == jnp.float32, (method, out.dtype)
+            old_s = [(l.shape, jnp.dtype(l.dtype))
+                     for l in jax.tree.leaves(state)]
+            new_s = [(l.shape, jnp.dtype(l.dtype))
+                     for l in jax.tree.leaves(new_state)]
+            assert old_s == new_s, (
+                f"{method}: carry is not a fixed point — "
+                f"{old_s} -> {new_s}")
+
+        # 3. non-adaptive estimators must refuse to mint a carry.
+        _expect_raises(
+            lambda: Estimator(method="vrmom", K=4)
+            .init_adaptive_state(nw, dim),
+            ValueError, "adaptive",
+            "init_adaptive_state on a fixed-K estimator")
+        return ("auto_gm/vrmom_adaptive carry round-trips with fixed "
+                "shapes+dtypes; module globals immutable; fixed-K "
+                "estimators refuse a carry")
+
+    return [_result("RL211", "core.adaptive carry", body)]
+
+
+# ---------------------------------------------------------------------------
 # RL209 — recompile stability (public helper + the spec sweep)
 # ---------------------------------------------------------------------------
 
@@ -455,6 +521,8 @@ def _check_recompile() -> List[AuditResult]:
     specs = [
         ("core.Estimator",
          lambda: Estimator(method="vrmom", K=4, backend="pallas")),
+        ("core.Estimator[adaptive]",
+         lambda: Estimator(method="auto_gm")),
         ("dist.ConsensusConfig",
          lambda: ConsensusConfig(f=1, eps=1e-3, trim="midpoint")),
         ("dist.FaultPlan",
@@ -524,5 +592,6 @@ def run_audit() -> List[AuditResult]:
     results += _check_serve_engine()
     results += _check_sandwich()
     results += _check_consensus()
+    results += _check_adaptive_carry()
     results += _check_recompile()
     return results

@@ -143,6 +143,14 @@ AUDIT_CHECKS = (
         "trace time — outside that region approximate consensus loses "
         "validity.",
         "DESIGN §13 (PR 9)"),
+    RuleInfo(
+        "RL211", "adaptive-state-carry",
+        "The adaptive aggregation state (per-worker weights, momentum, "
+        "alpha_hat) is an explicit jit-pure carry: init_state/apply "
+        "round-trip under eval_shape with fixed shapes and dtypes, "
+        "repro.core.adaptive holds no mutable module-level state, and "
+        "non-adaptive estimators refuse to mint a carry.",
+        "DESIGN §14 (PR 10)"),
 )
 
 ALL_IDS = tuple(r.id for r in AST_RULES + AUDIT_CHECKS)

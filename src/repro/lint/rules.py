@@ -116,6 +116,7 @@ class DirectAggregationRule(Rule):
     ALLOW = (
         "core/estimator.py",
         "core/aggregators.py",
+        "core/adaptive.py",
         "core/vrmom.py",
         "core/__init__.py",
         "kernels/ref.py",

@@ -106,6 +106,10 @@ METRICS = (
                "Mean per-worker gradient L2 norm before aggregation."),
     MetricInfo("agg.grad_norm_post", "gauge", "l2",
                "L2 norm of the robustly aggregated gradient."),
+    MetricInfo("agg.worker_weight_min", "gauge", "weight",
+               "Smallest online per-worker census weight in the adaptive "
+               "aggregation state (DESIGN.md §14); 1.0 means no worker "
+               "is downweighted."),
     # -- decentralized consensus backend (DESIGN.md §13) --------------------
     MetricInfo("consensus.rounds", "histogram", "rounds",
                "Rounds until the honest-alive spread first reached eps "

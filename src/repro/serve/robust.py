@@ -128,7 +128,11 @@ class RobustDecodeConfig:
             raise TypeError(
                 f"estimator must be a method name or an Estimator, "
                 f"got {type(est)!r}")
-        est.require_coordinatewise(
+        # Replica logits are complete worker rows ([m, B, V] flattens
+        # to [m, B*V]), so the adaptive tier (§14) is legal here along
+        # with every coordinate-wise method; whole-vector selectors
+        # stay rejected.
+        est.require_stackable(
             "replicated logit aggregation (serve.robust)")
         est.validate(self.m)
         object.__setattr__(self, "estimator", est)

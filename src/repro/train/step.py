@@ -10,6 +10,7 @@ and fully sharded; the returned callable carries .in_shardings /
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Optional
 
 import jax
@@ -34,6 +35,11 @@ class TrainSetup:
     batch_axes: tuple
     worker_axes: tuple
     n_workers: int
+    # Adaptive estimators only (est.adaptive): zero-arg callable building
+    # the initial core.adaptive.AdaptiveState carry; the step then takes
+    # it as a trailing arg and returns the updated state after the loss
+    # (RL211: adaptive state is an explicit carry, never Python state).
+    init_state: Optional[Callable] = None
 
 
 
@@ -54,6 +60,8 @@ def make_train_step(
     reduce_backend: str = "rrs",
     consensus=None,
     fault_plan=None,
+    weights_beta: float = 0.5,
+    momentum: float = 0.0,
 ) -> TrainSetup:
     """``estimator``: a ``core.estimator.Estimator`` (or method name) —
     the single aggregation spec threaded to every robust-reduction mode.
@@ -72,7 +80,13 @@ def make_train_step(
     ``dist.faults.FaultPlan`` of injected dropout/crashes/stragglers).
     In consensus mode the step always returns a
     ``dist.consensus.ConsensusAux`` after the loss — the step signature
-    becomes ``(params, opt, loss, caux[, diag])``."""
+    becomes ``(params, opt, loss, caux[, diag])``.
+    Adaptive estimators (``est.adaptive``, DESIGN.md §14) reroute the
+    stacked wire through ``aggregate_stacked_adaptive``: the step takes
+    an ``AdaptiveState`` as a trailing argument (build it with
+    ``TrainSetup.init_state()``) and returns the new state after the
+    loss — ``(params, opt, loss, agg_state[, diag])``. ``weights_beta``
+    / ``momentum`` are the adaptive EMA knobs (ignored otherwise)."""
     est = Estimator.coerce(estimator)
     if with_diag and mode == "inloop":
         raise ValueError(
@@ -104,10 +118,32 @@ def make_train_step(
         if n_workers > 1:
             consensus.validate(n_workers)  # fail at build, not at trace
 
+    if est.adaptive:
+        if mode == "inloop":
+            raise ValueError(
+                "adaptive estimators need the materialized stacked wire; "
+                "inloop (IB-RRS) aggregates inside the backward pass. "
+                "Use a stacked mode.")
+        if mode == "stacked-consensus":
+            raise ValueError(
+                "adaptive estimators are unavailable on the consensus "
+                "backend: peer rounds exchange coordinate slices, never "
+                "complete worker rows (DESIGN.md §13). Use "
+                "reduce_backend='rrs'.")
+        mode = "stacked-adaptive"
+
     params_shapes = M.abstract_init(cfg)
     params_specs = S.param_specs(params_shapes, mesh)
     opt_shapes = jax.eval_shape(optimizer.init, params_shapes)
     opt_specs = S.opt_state_specs(opt_shapes, params_shapes, params_specs)
+
+    init_state = None
+    if est.adaptive:
+        # The adaptive wire ravels every leaf, so the census dimension is
+        # the total parameter count.
+        wire_dim = sum(math.prod(l.shape)
+                       for l in jax.tree.leaves(params_shapes))
+        init_state = lambda: est.init_adaptive_state(n_workers, wire_dim)
 
     n_byz = int(byzantine_frac * (n_workers - 1))
     mask = jnp.arange(n_workers) >= (n_workers - n_byz)
@@ -148,7 +184,7 @@ def make_train_step(
 
     _micro_for_static = [1]
 
-    def train_step(params, opt_state, batch, key):
+    def train_step(params, opt_state, batch, key, agg_state=None):
       with CTX.mesh_context(mesh):
           if mode == "inloop":
               # IB-RRS: global backward; heavy matmul grads are robust-
@@ -237,16 +273,25 @@ def make_train_step(
                                      consensus=consensus, plan=fault_plan,
                                      key=k_cons,
                                      pin_mask=mask if n_byz else None)
+              elif mode == "stacked-adaptive":
+                  agg = RR.aggregate_stacked_adaptive(
+                      grads, agg_state, est, with_diag=with_diag,
+                      weights_beta=weights_beta, momentum=momentum)
               else:
                   agg = RR.aggregate(grads, mesh, worker_axes, mode=mode,
                                      est=est, specs=stacked_specs,
                                      with_diag=with_diag)
-          diag = caux = None
+          diag = caux = new_state = None
           if mode == "stacked-consensus":
               if with_diag:
                   agg, caux, diag = agg
               else:
                   agg, caux = agg
+          elif mode == "stacked-adaptive":
+              if with_diag:
+                  agg, new_state, diag = agg
+              else:
+                  agg, new_state = agg
           elif with_diag:
               agg, diag = agg
           agg = jax.lax.with_sharding_constraint(
@@ -255,6 +300,8 @@ def make_train_step(
           new_params = jax.lax.with_sharding_constraint(
               new_params, S.to_named(mesh, params_specs))
           out = (new_params, new_opt, loss)
+          if new_state is not None:
+              out = out + (new_state,)
           if caux is not None:
               out = out + (caux,)
           if with_diag:
@@ -268,6 +315,7 @@ def make_train_step(
         batch_axes=batch_axes,
         worker_axes=worker_axes,
         n_workers=n_workers,
+        init_state=init_state,
     )
 
 

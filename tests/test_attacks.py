@@ -90,6 +90,50 @@ def test_alie_explicit_z_override():
     assert np.allclose(z, 1.5, atol=1e-3), z
 
 
+@pytest.mark.parametrize("n", (2, 3, 4, 5, 9))
+def test_alie_default_z_boundary_n(n):
+    """S2 regression: the default z must stay finite and *non-zero* for
+    tiny/even stacks. The old floor(n/2+1)-quantile default degenerated
+    for n <= 3 (quantile -> 1, z -> inf or nan) and pinned z near 0 for
+    n in (4, 5); the supported-rank default keeps a strictly positive,
+    finite payload offset at every n >= 2."""
+    v = jax.random.normal(jax.random.PRNGKey(n), (n, 7))
+    n_byz = max(int(0.25 * n), 1)
+    mask = jnp.arange(n) >= (n - n_byz)
+    out = A.alie(jax.random.PRNGKey(1), v, mask)
+    assert bool(jnp.all(jnp.isfinite(out))), n
+    # the payload must actually move the corrupted rows (z > 0 strictly)
+    assert not np.array_equal(np.asarray(out)[-1], np.asarray(v)[-1]), n
+    # and honest rows stay untouched
+    np.testing.assert_array_equal(np.asarray(out)[0], np.asarray(v)[0])
+
+
+def test_ipm_payload_is_negative_scaled_honest_mean():
+    """IPM (inner-product manipulation): every Byzantine row reports
+    ``-eps * mean(honest)`` so the aggregate's inner product with the
+    true descent direction is driven negative."""
+    v = _stack(jnp.float32, key=13)
+    mask = A.byzantine_mask(v.shape[0], 0.25)
+    out = np.asarray(A.ipm(jax.random.PRNGKey(6), v, mask, eps=0.5))
+    h = np.asarray(v)[~np.asarray(mask)]
+    np.testing.assert_allclose(out[-1], -0.5 * h.mean(0), rtol=1e-5)
+    np.testing.assert_array_equal(out[-1], out[-2])  # coordinated
+
+
+def test_mimic_clones_an_honest_worker():
+    """Mimic: all Byzantine rows re-broadcast one *honest* row verbatim
+    (the most-deviant one — maximally skews any weighted aggregate
+    toward that outlier while every reported value stays legitimate)."""
+    v = _stack(jnp.float32, key=17)
+    mask = np.asarray(A.byzantine_mask(v.shape[0], 0.25))
+    out = np.asarray(A.mimic(jax.random.PRNGKey(7), v, mask))
+    byz_rows = out[mask]
+    honest = np.asarray(v)[~mask]
+    # every corrupt row equals the same single honest row
+    np.testing.assert_array_equal(byz_rows[0], byz_rows[-1])
+    assert any(np.array_equal(byz_rows[0], h) for h in honest)
+
+
 def test_alie_is_stealthy_where_omniscient_is_not():
     """ALIE payloads stay inside the honest 3-sigma envelope (that is
     the attack: evade distance-based filtering); omniscient payloads

@@ -122,6 +122,51 @@ def test_stragglers_converge():
     assert not bool(aux.quorum_lost)
 
 
+@pytest.mark.parametrize("attack", ["ipm", "mimic"])
+def test_omniscient_pin_composition_stays_bounded(attack):
+    """S4 (DESIGN.md §14): omniscient attack payloads re-broadcast every
+    round by the *pinned* Byzantine rows compose with the consensus
+    trim: the honest consensus value stays inside the honest cloud and
+    quorum holds — for both a loud payload (ipm at eps=100) and a
+    legitimate-looking one (mimic)."""
+    n = 16
+    v = _stack(n=n, key=5)
+    mask = jnp.arange(n) >= n - 3            # 3 pinned Byzantine, 16 > 5*3
+    if attack == "ipm":
+        v_att = A.ipm(jax.random.PRNGKey(8), v, mask, eps=100.0)
+    else:
+        v_att = A.mimic(jax.random.PRNGKey(8), v, mask)
+    cfg = ConsensusConfig(f=3).validate(n)
+    got, aux = consensus_aggregate(v_att, "vrmom", config=cfg,
+                                   key=jax.random.PRNGKey(12), pin_mask=mask)
+    assert np.isfinite(np.asarray(got)).all()
+    assert not bool(aux.quorum_lost)
+    assert float(aux.spread) <= cfg.eps
+    ref = np.asarray(v)[: n - 3].mean(0)     # honest reference
+    assert np.abs(np.asarray(got) - ref).max() < 3.0
+
+
+def test_omniscient_pin_mean_control_diverges():
+    """The contrast cell for S4: the same pinned ipm payload through an
+    untrimmed mean consensus (f=0) drags the value far from the honest
+    cloud — robust trimming, not the consensus rounds, is what bounds
+    the error above."""
+    n = 16
+    v = _stack(n=n, key=5)
+    mask = jnp.arange(n) >= n - 3
+    v_att = A.ipm(jax.random.PRNGKey(8), v, mask, eps=100.0)
+    ref = np.asarray(v)[: n - 3].mean(0)
+    robust, _ = consensus_aggregate(
+        v_att, "vrmom", config=ConsensusConfig(f=3).validate(n),
+        key=jax.random.PRNGKey(12), pin_mask=mask)
+    control, _ = consensus_aggregate(
+        v_att, "mean", config=ConsensusConfig(f=0).validate(n),
+        key=jax.random.PRNGKey(12), pin_mask=mask)
+    err_r = np.linalg.norm(np.asarray(robust) - ref)
+    err_c = np.linalg.norm(np.asarray(control) - ref)
+    assert err_c > 5.0 * err_r + 1.0, (err_c, err_r)
+
+
 def test_aux_fields_are_scalars():
     v = _stack()
     _, aux = consensus_aggregate(v, "vrmom",

@@ -76,8 +76,14 @@ def test_cov_factor_dispatch_and_rejection():
         np.eye(2), atol=1e-7)
     assert float(cov_factor(Sigma, Estimator(method="median"))[0, 0]) == \
         pytest.approx(math.pi / 2, rel=1e-5)
+    # trimmed_mean carries the winsorized-IF scaling (>= 1 on the
+    # diagonal — trimming always costs efficiency at the Gaussian)
+    tm = np.asarray(cov_factor(Sigma, Estimator(method="trimmed_mean",
+                                                beta=0.2)))
+    assert tm[0, 0] > 1.0
+    # whole-vector selectors have no normality theory in the paper
     with pytest.raises(ValueError, match="no asymptotic-normality"):
-        cov_factor(Sigma, Estimator(method="trimmed_mean", beta=0.2))
+        cov_factor(Sigma, Estimator(method="geometric_median"))
 
 
 def test_contamination_inflation():
